@@ -1,0 +1,35 @@
+"""Benchmark utilities: timing + CSV emission.
+
+Every benchmark module exposes ``rows() -> list[dict]`` with at least
+{"name", "us_per_call", "derived"}; run.py prints them as CSV.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": round(us, 1), "derived": derived}
+
+
+def print_csv(rows: list[dict]) -> None:
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

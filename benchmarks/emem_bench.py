@@ -1,0 +1,44 @@
+"""EMem executable microbenchmark: random read/write throughput on the host
+device plus analytic dispatch cost at production scale (the executable
+counterpart of the paper's Fig. 9 -- §2.1 as TPU-pod infrastructure)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import emem
+
+
+def rows() -> list[dict]:
+    out = []
+    rng = np.random.default_rng(0)
+    for n_slots, width in ((1 << 14, 64), (1 << 16, 128)):
+        spec = emem.EMemSpec(n_slots=n_slots, width=width, page_slots=128,
+                             n_shards=1)
+        data = emem.create(spec)
+        addrs = jnp.asarray(
+            rng.integers(0, n_slots, 4096).astype(np.int32))
+        vals = jnp.asarray(
+            rng.normal(size=(4096, width)).astype(np.float32))
+        read = jax.jit(lambda d, a: emem.read_ref(spec, d, a))
+        write = jax.jit(lambda d, a, v: emem.write_ref(spec, d, a, v))
+        us_r = timeit(lambda: read(data, addrs).block_until_ready())
+        us_w = timeit(lambda: write(data, addrs, vals).block_until_ready())
+        gb = 4096 * width * 4 / 1e9
+        out.append(row(f"emem/read/{n_slots}x{width}", us_r,
+                       f"{gb / (us_r / 1e6):.2f} GB/s effective"))
+        out.append(row(f"emem/write/{n_slots}x{width}", us_w,
+                       f"{gb / (us_w / 1e6):.2f} GB/s effective"))
+    # analytic dispatch traffic at production scale (256-chip pod)
+    for shards in (16, 256):
+        spec = emem.EMemSpec(n_slots=1 << 24, width=128, page_slots=256,
+                             n_shards=shards)
+        st = emem.dispatch_stats(spec, n_requests_per_shard=4096,
+                                 capacity_factor=1.5)
+        out.append(row(
+            f"emem/dispatch/{shards}shards", 0.0,
+            f"a2a={st['a2a_bytes_per_shard'] / 1e6:.2f}MB/shard "
+            f"p_overflow={st['p_queue_overflow']:.2e} cap={st['capacity']}"))
+    return out

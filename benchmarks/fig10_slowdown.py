@@ -1,0 +1,20 @@
+"""Fig. 10: Dhrystone/compiler slowdown vs emulation size, both networks."""
+from __future__ import annotations
+
+from benchmarks.common import row, timeit
+from repro.core import emulation
+
+
+def rows() -> list[dict]:
+    out = []
+    for system in (1024, 4096):
+        us = timeit(emulation.fig10_sweep, system)
+        sweep = emulation.fig10_sweep(system)
+        for i, n in enumerate(sweep["sizes"]):
+            out.append(row(
+                f"fig10/{system}sys/{n}t", us if i == 0 else 0.0,
+                f"clos/dhry={sweep['clos/dhrystone'][i]:.2f} "
+                f"clos/comp={sweep['clos/compiler'][i]:.2f} "
+                f"mesh/dhry={sweep['mesh/dhrystone'][i]:.2f} "
+                f"mesh/comp={sweep['mesh/compiler'][i]:.2f}"))
+    return out

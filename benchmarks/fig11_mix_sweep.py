@@ -1,0 +1,17 @@
+"""Fig. 11: slowdown vs global-access fraction (local fixed at 20%)."""
+from __future__ import annotations
+
+from benchmarks.common import row, timeit
+from repro.core import emulation
+
+
+def rows() -> list[dict]:
+    out = []
+    for system in (1024, 4096):
+        us = timeit(emulation.fig11_sweep, system)
+        sweep = emulation.fig11_sweep(system)
+        for i, g in enumerate(sweep["global_frac"]):
+            out.append(row(
+                f"fig11/{system}sys/g{int(100 * g):02d}", us if i == 0 else 0.0,
+                f"clos={sweep['clos'][i]:.2f} mesh={sweep['mesh'][i]:.2f}"))
+    return out

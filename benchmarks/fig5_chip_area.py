@@ -1,0 +1,28 @@
+"""Fig. 5: total chip area vs tile count, folded Clos and 2D mesh."""
+from __future__ import annotations
+
+from benchmarks.common import row, timeit
+from repro.core import vlsi
+
+
+def rows() -> list[dict]:
+    out = []
+    for net in ("clos", "mesh"):
+        for mem_kb in (64, 128, 256, 512):
+            for n in (16, 32, 64, 128, 256, 512):
+                us = timeit(vlsi.chip, net, n, mem_kb)
+                c = vlsi.chip(net, n, mem_kb)
+                out.append(row(
+                    f"fig5/{net}/{n}t/{mem_kb}KB", us,
+                    f"total={c.total_mm2:.1f}mm2 io={c.io_mm2:.1f} "
+                    f"econ={c.economical}"))
+    # headline anchors
+    c = vlsi.clos_chip(256, 128)
+    m = vlsi.mesh_chip(256, 128)
+    out.append(row("fig5/anchor/clos-256-128", 0.0,
+                   f"total={c.total_mm2:.1f} (paper 132.9) "
+                   f"io={c.io_mm2:.1f} (paper 44.6)"))
+    out.append(row("fig5/anchor/mesh-256-128", 0.0,
+                   f"total={m.total_mm2:.1f} (paper 87.9) "
+                   f"ratio={c.total_mm2 / m.total_mm2:.2f} (paper 1.13-1.43)"))
+    return out

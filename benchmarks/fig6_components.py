@@ -1,0 +1,20 @@
+"""Fig. 6: switch/wire/IO area as % of die, vs tile count (256 KB tiles)."""
+from __future__ import annotations
+
+from benchmarks.common import row, timeit
+from repro.core import vlsi
+
+
+def rows() -> list[dict]:
+    out = []
+    for net in ("clos", "mesh"):
+        for n in (16, 32, 64, 128, 256, 512):
+            us = timeit(vlsi.chip, net, n, 256)
+            c = vlsi.chip(net, n, 256)
+            sw = (c.edge_switch_mm2 + c.switch_group_mm2) / c.total_mm2
+            wire = c.channel_wire_mm2 / c.total_mm2
+            out.append(row(
+                f"fig6/{net}/{n}t", us,
+                f"switch={100 * sw:.2f}% wire={100 * wire:.2f}% "
+                f"io={100 * c.io_frac:.1f}% ic={100 * c.interconnect_frac:.1f}%"))
+    return out

@@ -1,0 +1,19 @@
+"""Fig. 7: interposer area for multi-chip systems + channel fraction."""
+from __future__ import annotations
+
+from benchmarks.common import row, timeit
+from repro.core import vlsi
+
+
+def rows() -> list[dict]:
+    out = []
+    for net in ("clos", "mesh"):
+        for tiles_per_chip in (128, 256, 512):
+            for n_chips in (2, 4, 8, 16):
+                us = timeit(vlsi.interposer, net, n_chips, tiles_per_chip, 128)
+                ip = vlsi.interposer(net, n_chips, tiles_per_chip, 128)
+                out.append(row(
+                    f"fig7/{net}/{n_chips}x{tiles_per_chip}t", us,
+                    f"total={ip.total_mm2:.0f}mm2 chan={100 * ip.channel_frac:.1f}% "
+                    f"wire={ip.min_wire_ns:.2f}-{ip.max_wire_ns:.2f}ns"))
+    return out

@@ -1,0 +1,23 @@
+"""Fig. 9: emulated-memory access latency vs emulation size (both panels)."""
+from __future__ import annotations
+
+from benchmarks.common import row, timeit
+from repro.core import dram, latency
+
+
+def rows() -> list[dict]:
+    out = []
+    base = dram.paper_baseline(1)
+    out.append(row("fig9/ddr3-baseline", 0.0,
+                   f"{base:.1f}ns (paper 35); multi-rank "
+                   f"{dram.paper_baseline(4):.1f}ns (paper 36)"))
+    for system in (1024, 4096):
+        us = timeit(latency.fig9_sweep, system)
+        sweep = latency.fig9_sweep(system)
+        for i, n in enumerate(sweep["sizes"]):
+            c, m = sweep["clos"][i], sweep["mesh"][i]
+            out.append(row(
+                f"fig9/{system}sys/{n}t", us if i == 0 else 0.0,
+                f"clos={c:.1f}ns ({c / base:.2f}x ddr3) mesh={m:.1f}ns "
+                f"(mesh/clos={m / c:.2f})"))
+    return out

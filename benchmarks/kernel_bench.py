@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks on the host device (oracle path) with analytic
+TPU-target FLOP counts -- the per-kernel roofline inputs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.launch.hlo_analysis import PEAK_FLOPS_BF16
+
+
+def rows() -> list[dict]:
+    out = []
+    rng = np.random.default_rng(0)
+
+    # flash attention (ref path timing; pallas path is TPU-target)
+    from repro.kernels.flash_attention import flash_attention
+    B, Hq, Hkv, S, D = 1, 8, 2, 1024, 64
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    us = timeit(lambda: flash_attention(q, k, v, causal=True,
+                                        use_pallas=False).block_until_ready())
+    flops = 2 * 2 * B * Hq * S * S * D * 0.5
+    out.append(row("kernel/flash_attn/1x8x1024x64", us,
+                   f"{flops / 1e9:.2f} GFLOP -> "
+                   f"{flops / PEAK_FLOPS_BF16 * 1e6:.2f}us on v5e MXU"))
+
+    # decode attention
+    from repro.kernels.decode_attention import decode_attention
+    kc = jnp.asarray(rng.normal(size=(4, Hkv, 4096, D)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(size=(4, Hkv, 4096, D)).astype(np.float32))
+    qd = jnp.asarray(rng.normal(size=(4, Hq, D)).astype(np.float32))
+    lengths = jnp.full((4,), 4096, jnp.int32)
+    us = timeit(lambda: decode_attention(qd, kc, vc, lengths,
+                                         use_pallas=False).block_until_ready())
+    kv_bytes = 2 * 4 * Hkv * 4096 * D * 2
+    out.append(row("kernel/decode_attn/4x8x4096", us,
+                   f"kv={kv_bytes / 1e6:.1f}MB -> "
+                   f"{kv_bytes / 819e9 * 1e6:.1f}us HBM-bound on v5e"))
+
+    # mamba2 SSD
+    from repro.kernels.mamba2_ssd import ssd
+    Bt, Sm, H, P, N = 1, 2048, 8, 64, 64
+    x = jnp.asarray(rng.normal(size=(Bt, Sm, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (Bt, Sm, H)).astype(np.float32))
+    A = jnp.asarray(-rng.uniform(0.5, 2, (H,)).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(Bt, Sm, 1, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(Bt, Sm, 1, N)).astype(np.float32))
+    Dm = jnp.asarray(rng.normal(size=(H,)).astype(np.float32))
+    us = timeit(lambda: ssd(x, dt, A, Bm, Cm, Dm, chunk=128,
+                            use_pallas=False).block_until_ready())
+    q_ = 128
+    ssd_flops = Bt * H * (Sm // q_) * (2 * q_ * q_ * N + 2 * q_ * q_ * P
+                                       + 4 * q_ * N * P)
+    out.append(row("kernel/mamba2_ssd/2048x8x64", us,
+                   f"{ssd_flops / 1e9:.2f} GFLOP chunked"))
+
+    # emem paged gather
+    from repro.kernels.emem_gather import gather_pages
+    pages = jnp.asarray(rng.normal(size=(256, 128, 128)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 256, 64).astype(np.int32))
+    us = timeit(lambda: gather_pages(pages, ids,
+                                     use_pallas=False).block_until_ready())
+    gbytes = 64 * 128 * 128 * 4
+    out.append(row("kernel/emem_gather/64pages", us,
+                   f"{gbytes / 1e6:.1f}MB -> "
+                   f"{gbytes / 819e9 * 1e6:.1f}us HBM-bound on v5e"))
+    return out

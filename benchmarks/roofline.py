@@ -1,0 +1,71 @@
+"""Roofline table: reads the dry-run artifacts and renders §Roofline rows.
+
+One row per (arch x shape x mesh) cell: the three roofline terms in
+seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the one-line
+"what would move the dominant term".  This module is also the generator for
+EXPERIMENTS.md §Roofline (see scripts/render_experiments.py).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(mesh: str | None = None) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        cells.append(r)
+    return cells
+
+
+def hint(cell: dict) -> str:
+    """One sentence: what moves the dominant term down."""
+    dom = cell["roofline"]["dominant"]
+    kind = cell.get("kind")
+    if dom == "compute":
+        if kind == "train":
+            return ("offload-free remat policy (save attention outputs) to "
+                    "cut the recompute fwd pass")
+        return "larger per-step batch to amortize; already MXU-bound"
+    if dom == "memory":
+        if kind == "decode":
+            return ("KV-cache traffic bound: int8/fp8 KV quantization or "
+                    "grouped multi-token (speculative) decode")
+        return ("operand re-reads: wider fusion via flash/blockwise kernels "
+                "and bf16 intermediates")
+    return ("collective bytes: bf16 collectives, reduce-scatter instead of "
+            "all-reduce+slice, and overlap via microbatch pipelining")
+
+
+def rows() -> list[dict]:
+    out = []
+    for c in load_cells():
+        name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c["status"] == "skipped":
+            out.append(row(name, 0.0, f"SKIP: {c['reason'][:60]}"))
+            continue
+        if c["status"] != "ok":
+            out.append(row(name, 0.0, f"ERROR: {c.get('error', '')[:60]}"))
+            continue
+        r = c["roofline"]
+        terms = (f"comp={r['compute_s']:.3g}s mem={r['memory_s']:.3g}s "
+                 f"coll={r['collective_s']:.3g}s dom={r['dominant']}")
+        ratio = c.get("useful_flops_ratio")
+        if c["mesh"] == "single" and ratio:
+            # multi-pod cells carry scan-body costs only (no depth probes;
+            # §Roofline is single-pod) -- the ratio is meaningful here only
+            terms += f" useful={ratio:.2f}"
+        out.append(row(name, 0.0, terms))
+    if not out:
+        out.append(row("roofline/none", 0.0,
+                       "no dry-run artifacts yet (run repro.launch.dryrun)"))
+    return out

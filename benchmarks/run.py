@@ -1,0 +1,31 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the repo convention).
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import print_csv
+
+
+def main() -> None:
+    from benchmarks import (emem_bench, fig5_chip_area, fig6_components,
+                            fig7_interposer, fig9_latency, fig10_slowdown,
+                            fig11_mix_sweep, kernel_bench, roofline,
+                            tab_binary_size)
+    modules = [fig5_chip_area, fig6_components, fig7_interposer, fig9_latency,
+               fig10_slowdown, fig11_mix_sweep, tab_binary_size, emem_bench,
+               kernel_bench, roofline]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    rows = []
+    for m in modules:
+        name = m.__name__.split(".")[-1]
+        if only and only not in name:
+            continue
+        rows.extend(m.rows())
+    print_csv(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""§7.3: program-binary size increase from the communication rewriting."""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import emulation
+
+
+def rows() -> list[dict]:
+    b = emulation.COMPILER_BINARY
+    return [
+        row("tab_binary/load-overhead", 0.0,
+            f"+{emulation.LOAD_EXTRA_INSTRS} instrs (paper +2)"),
+        row("tab_binary/store-overhead", 0.0,
+            f"+{emulation.STORE_EXTRA_INSTRS} instrs (paper +3)"),
+        row("tab_binary/compiler-self-compile", 0.0,
+            f"+{100 * b.size_overhead():.1f}% (paper +8%)"),
+    ]

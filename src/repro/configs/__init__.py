@@ -1,0 +1,2 @@
+from repro.configs.registry import ARCHS, get_config, get_smoke_config, list_archs  # noqa: F401
+from repro.configs.shapes import SHAPES, applicable, config_for_shape, input_specs  # noqa: F401

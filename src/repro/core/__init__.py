@@ -1,0 +1,17 @@
+"""Core: the paper's contribution.
+
+Analytic layer (paper-faithful reproduction of §4-7):
+  params, topology, vlsi, dram, latency, emulation
+
+Executable layer (the emulation scheme as TPU-pod infrastructure):
+  emem -- distributed flat address space over a device mesh
+"""
+from repro.core import (  # noqa: F401
+    dram,
+    emem,
+    emulation,
+    latency,
+    params,
+    topology,
+    vlsi,
+)

@@ -1,0 +1,167 @@
+"""Emulation-scheme performance model (paper §2.1, §6.2, §7.2, §7.3).
+
+A sequential program is characterised by its instruction mix: non-memory
+instructions, local-memory accesses (program/stack/constants -- always in the
+tile's local SRAM, single cycle) and global-memory accesses (static data +
+heap -- served by DRAM on the sequential machine, by the emulated distributed
+memory on the parallel machine).
+
+Global accesses on the parallel machine are rewritten as communication
+sequences (§2.1):
+
+    LOAD  dest, addr  ->  SEND c,READ; SEND c,addr; RECEIVE dest   (+2 instrs)
+    STORE value, addr ->  SEND c,WRITE; SEND c,addr; SEND c,value  (+3 instrs)
+
+so each global access costs its extra issue cycles plus the blocking
+round-trip through the network (both loads and stores complete before the
+next access issues -- the paper's sequential-consistency measurement loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import dram as dram_mod
+from repro.core import latency as lat_mod
+from repro.core import params as P
+
+#: §2.1 communication-sequence instruction overheads (§7.3).
+LOAD_EXTRA_INSTRS = 2
+STORE_EXTRA_INSTRS = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class InstructionMix:
+    """Dynamic instruction mix of a benchmark (paper Fig. 8)."""
+    name: str
+    non_mem: float
+    local: float
+    global_: float
+    load_frac: float = 0.6          # loads as a fraction of global accesses
+
+    def __post_init__(self):
+        total = self.non_mem + self.local + self.global_
+        if abs(total - 1.0) > 1e-9:
+            raise ValueError(f"instruction mix must sum to 1, got {total}")
+
+    @property
+    def store_frac(self) -> float:
+        return 1.0 - self.load_frac
+
+
+#: The two benchmark mixes (paper Fig. 8; local fixed at 20%, global 10-20%).
+DHRYSTONE = InstructionMix("dhrystone", non_mem=0.60, local=0.20, global_=0.20)
+COMPILER = InstructionMix("compiler", non_mem=0.70, local=0.20, global_=0.10)
+
+
+def synthetic_mix(global_frac: float, local_frac: float = 0.20) -> InstructionMix:
+    """Synthetic sequences with a swept global fraction (Fig. 11)."""
+    return InstructionMix(f"synthetic-g{global_frac:.2f}",
+                          non_mem=1.0 - local_frac - global_frac,
+                          local=local_frac, global_=global_frac)
+
+
+@dataclasses.dataclass(frozen=True)
+class SequentialMachine:
+    """Baseline: same processor class + DDR3 DRAM (paper §6.1)."""
+    dram: dram_mod.DRAMSystem = dram_mod.DRAMSystem()
+    clock_ghz: float = P.CHIP.clock_ghz
+
+    def global_access_cycles(self) -> float:
+        return 1.0 + self.dram.random_access_latency_cycles(self.clock_ghz)
+
+    def cycles_per_instruction(self, mix: InstructionMix) -> float:
+        return (mix.non_mem + mix.local) * 1.0 + mix.global_ * self.global_access_cycles()
+
+
+class EmulationMachine:
+    """The parallel machine running the same program with an emulated memory."""
+
+    def __init__(self, sys: lat_mod.SystemConfig, emulation_tiles: int):
+        self.sys = sys
+        self.model = lat_mod.LatencyModel(sys)
+        self.emulation_tiles = min(emulation_tiles, sys.n_tiles)
+
+    def global_access_cycles(self, mix: InstructionMix) -> float:
+        rt = self.model.mean_access_latency(self.emulation_tiles)
+        issue = (1.0
+                 + mix.load_frac * LOAD_EXTRA_INSTRS
+                 + mix.store_frac * STORE_EXTRA_INSTRS)
+        return issue + rt
+
+    def cycles_per_instruction(self, mix: InstructionMix) -> float:
+        return ((mix.non_mem + mix.local) * 1.0
+                + mix.global_ * self.global_access_cycles(mix))
+
+
+def slowdown(mix: InstructionMix, network: str, system_tiles: int,
+             emulation_tiles: int, mem_kb: int = 256,
+             dram_capacity_gb: int | None = None) -> float:
+    """Relative slowdown of the emulation vs the sequential machine (Fig. 10).
+
+    The DRAM baseline capacity defaults to the capacity of the emulated
+    memory, so both machines offer the same amount of global storage.
+    """
+    if dram_capacity_gb is None:
+        cap_bytes = emulation_tiles * mem_kb * 1024
+        dram_capacity_gb = max(1, round(cap_bytes / 2**30))
+    seq = SequentialMachine(dram=dram_mod.DRAMSystem(capacity_gb=dram_capacity_gb))
+    par = EmulationMachine(
+        lat_mod.SystemConfig(network=network, n_tiles=system_tiles, mem_kb=mem_kb),
+        emulation_tiles)
+    return par.cycles_per_instruction(mix) / seq.cycles_per_instruction(mix)
+
+
+def fig10_sweep(system_tiles: int, mem_kb: int = 256) -> dict:
+    """Fig. 10: benchmark slowdown vs emulation size, both networks."""
+    sizes, n = [], 16
+    while n <= system_tiles:
+        sizes.append(n)
+        n *= 2
+    out: dict = {"sizes": sizes}
+    for net in ("clos", "mesh"):
+        for mix in (DHRYSTONE, COMPILER):
+            out[f"{net}/{mix.name}"] = [
+                slowdown(mix, net, system_tiles, s, mem_kb) for s in sizes]
+    return out
+
+
+def fig11_sweep(system_tiles: int, emulation_tiles: int | None = None,
+                mem_kb: int = 256) -> dict:
+    """Fig. 11: slowdown vs global-access fraction (0-50%), local fixed 20%."""
+    emulation_tiles = emulation_tiles or system_tiles
+    fracs = [i / 100.0 for i in range(0, 51, 5)]
+    out: dict = {"global_frac": fracs}
+    for net in ("clos", "mesh"):
+        vals = []
+        for g in fracs:
+            if g == 0.0:
+                vals.append(1.0)
+                continue
+            vals.append(slowdown(synthetic_mix(g), net, system_tiles,
+                                 emulation_tiles, mem_kb))
+        out[net] = vals
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Program binary size (§7.3)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StaticBinaryProfile:
+    """Static (not dynamic) instruction profile of a program binary.
+
+    The compiler's own binary has ~3.4% of its instructions at global-access
+    sites (static density is much lower than the 10% dynamic density because
+    hot loops concentrate dynamic global accesses).
+    """
+    name: str = "compiler"
+    global_load_sites: float = 0.022   # fraction of static instructions
+    global_store_sites: float = 0.012
+
+    def size_overhead(self) -> float:
+        """Fractional binary-size increase from the §2.1 rewriting."""
+        return (self.global_load_sites * LOAD_EXTRA_INSTRS
+                + self.global_store_sites * STORE_EXTRA_INSTRS)
+
+
+COMPILER_BINARY = StaticBinaryProfile()

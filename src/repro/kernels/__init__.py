@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+emem_gather      -- paged gather/scatter: the emulated-memory DMA hot loop
+flash_attention  -- GQA flash attention (causal, sliding window)
+decode_attention -- flash-decode over a (paged/sharded) KV cache
+mamba2_ssd       -- chunked state-space-duality scan
+"""

@@ -1,0 +1,5 @@
+from repro.kernels.decode_attention.ops import (  # noqa: F401
+    decode_attention,
+    decode_attention_partial,
+    merge_partials,
+)

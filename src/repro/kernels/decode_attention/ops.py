@@ -1,0 +1,77 @@
+"""Jitted public wrappers for decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import kernel as _k
+from repro.kernels.decode_attention import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "window", "block_k", "use_pallas", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, scale: float | None = None,
+                     window: int | None = None, block_k: int = 512,
+                     use_pallas: bool | None = None,
+                     interpret: bool | None = None) -> jax.Array:
+    """Single-token decode. q: [B, Hq, D]; k, v: [B, Hkv, S, D] -> [B, Hq, D]."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        return _ref.decode_attention(q, k, v, lengths, scale=scale, window=window)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, hq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    out, _, _ = _k.flash_decode(qg, k, v, lengths, scale=scale, window=window,
+                                block_k=block_k, interpret=interpret)
+    return out.reshape(b, hq, d)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "window", "block_k", "use_pallas", "interpret"))
+def decode_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
+                             lengths: jax.Array, *, scale: float | None = None,
+                             window: int | None = None, block_k: int = 512,
+                             use_pallas: bool | None = None,
+                             interpret: bool | None = None):
+    """Partial decode over a KV shard, for cross-shard (sequence-parallel)
+    merge.  Returns (out_normalized_locally, m [B,Hq], l [B,Hq])."""
+    b, hq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        s = k.shape[2]
+        pos = jnp.arange(s)[None, :]
+        valid = pos < lengths[:, None]
+        if window is not None:
+            valid &= pos >= (lengths[:, None] - window)
+        o, m, l = _ref.decode_attention_partial(q, k, v, valid, scale=scale)
+        ln = jnp.where(l == 0.0, 1.0, l)
+        return (o / ln[..., None]).astype(q.dtype), m, l
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    qg = q.reshape(b, hkv, g, d)
+    out, m, l = _k.flash_decode(qg, k, v, lengths, scale=scale, window=window,
+                                block_k=block_k, interpret=interpret)
+    return (out.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))
+
+
+def merge_partials(outs, ms, ls):
+    """Merge per-shard partials along a leading shard axis.
+
+    outs: [P, B, Hq, D] locally-normalized; ms, ls: [P, B, Hq].
+    """
+    m_max = ms.max(0)
+    scale = jnp.exp(ms - m_max)                            # [P, B, H]
+    w = scale * ls                                         # effective weights
+    denom = w.sum(0)
+    num = (w[..., None] * outs).sum(0)
+    return (num / jnp.where(denom == 0.0, 1.0, denom)[..., None]).astype(outs.dtype)

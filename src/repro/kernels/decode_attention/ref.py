@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for single-token decode attention over a (paged) KV cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray, *, scale: float | None = None,
+                     window: int | None = None) -> jnp.ndarray:
+    """One new token attends to its cached history.
+
+    q: [B, Hq, D] (the new token's queries)
+    k, v: [B, Hkv, S, D] (cache; positions >= lengths[b] are invalid)
+    lengths: [B] int32, number of valid cache positions INCLUDING the new
+        token (the new token's own k/v must already be written at
+        position lengths[b]-1).
+    window: sliding-window size (attend to the last ``window`` positions).
+    Returns [B, Hq, D].
+    """
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)[None, :]
+    valid = pos < lengths[:, None]
+    if window is not None:
+        valid &= pos >= (lengths[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def decode_attention_partial(q, k, v, valid_mask, *, scale=None):
+    """Partial flash-decode over a KV shard: returns (out_unnormalized, m, l).
+
+    q: [B, Hq, D]; k, v: [B, Hkv, S_shard, D]; valid_mask: [B, S_shard] bool.
+    Used as the oracle for the cross-shard merge of sequence-parallel decode:
+    full attention over the union of shards equals merge of the partials.
+    """
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32)) * scale
+    logits = jnp.where(valid_mask[:, None, None, :], logits, NEG_INF)
+    m = logits.max(-1)                                   # [B, Hkv, G]
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(valid_mask[:, None, None, :], p, 0.0)
+    l = p.sum(-1)                                        # [B, Hkv, G]
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return (out.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))
+
+
+def merge_partials(parts):
+    """Merge flash-decode partials [(out, m, l), ...] -> [B, Hq, D]."""
+    import jax.numpy as jnp
+    m_all = jnp.stack([m for _, m, _ in parts])          # [P, B, H]
+    m_max = m_all.max(0)
+    scale = jnp.exp(m_all - m_max)                       # [P, B, H]
+    l = sum(s * l_ for s, (_, _, l_) in zip(scale, parts))
+    o = sum(s[..., None] * o_ for s, (o_, _, _) in zip(scale, parts))
+    return (o / jnp.where(l == 0.0, 1.0, l)[..., None]).astype(parts[0][0].dtype)

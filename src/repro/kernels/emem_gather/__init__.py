@@ -1,0 +1,1 @@
+from repro.kernels.emem_gather.ops import gather_pages, gather_slots, scatter_slots  # noqa: F401

@@ -1,0 +1,59 @@
+"""Jitted public wrappers for the emem_gather kernels.
+
+Pads ``width`` to the 128-lane TPU tiling, chooses the Pallas kernel on TPU
+and interpret-mode (or the jnp oracle for very small problems) on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.emem_gather import kernel as _k
+from repro.kernels.emem_gather import ref as _ref
+
+LANE = 128
+
+
+def _pad_width(pages: jax.Array) -> tuple[jax.Array, int]:
+    width = pages.shape[-1]
+    pad = (-width) % LANE
+    if pad:
+        pages = jnp.pad(pages, ((0, 0), (0, 0), (0, pad)))
+    return pages, width
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gather_slots(pages: jax.Array, slots: jax.Array, *,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None) -> jax.Array:
+    """Gather slot rows from a paged store: [q] -> [q, width]."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        return _ref.gather_slots(pages, slots)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    padded, width = _pad_width(pages)
+    out = _k.gather_slots(padded, slots, interpret=interpret)
+    return out[:, :width]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gather_pages(pages: jax.Array, page_ids: jax.Array, *,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None) -> jax.Array:
+    """Gather whole pages: [p] -> [p, page_slots, width]."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        return _ref.gather_pages(pages, page_ids)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    padded, width = _pad_width(pages)
+    out = _k.gather_pages(padded, page_ids, interpret=interpret)
+    return out[:, :, :width]
+
+
+scatter_slots = jax.jit(_ref.scatter_slots)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the emem_gather / emem_scatter kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_slots(pages: jnp.ndarray, slots: jnp.ndarray) -> jnp.ndarray:
+    """Gather slot rows from a paged store.
+
+    pages: [n_pages, page_slots, width]; slots: [q] int32 flat slot indices
+    (slot = page * page_slots + offset), -1 meaning "empty" (returns zeros).
+    Returns [q, width].
+    """
+    n_pages, page_slots, width = pages.shape
+    flat = pages.reshape(n_pages * page_slots, width)
+    safe = jnp.where(slots >= 0, slots, 0)
+    out = flat[safe]
+    return jnp.where((slots >= 0)[:, None], out, jnp.zeros_like(out))
+
+
+def gather_pages(pages: jnp.ndarray, page_ids: jnp.ndarray) -> jnp.ndarray:
+    """Gather whole pages (the paper's DMA block transfer).
+
+    pages: [n_pages, page_slots, width]; page_ids: [p] int32, -1 = empty.
+    Returns [p, page_slots, width].
+    """
+    safe = jnp.where(page_ids >= 0, page_ids, 0)
+    out = pages[safe]
+    return jnp.where((page_ids >= 0)[:, None, None], out, jnp.zeros_like(out))
+
+
+def scatter_slots(pages: jnp.ndarray, slots: jnp.ndarray,
+                  values: jnp.ndarray) -> jnp.ndarray:
+    """Scatter rows into the paged store; slot -1 entries are dropped."""
+    n_pages, page_slots, width = pages.shape
+    flat = pages.reshape(n_pages * page_slots, width)
+    oob = n_pages * page_slots
+    idx = jnp.where(slots >= 0, slots, oob)
+    flat = flat.at[idx].set(values.astype(pages.dtype), mode="drop")
+    return flat.reshape(n_pages, page_slots, width)

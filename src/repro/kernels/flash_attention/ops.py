@@ -1,0 +1,31 @@
+"""Jitted public wrapper for flash attention with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k", "use_pallas", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None,
+                    block_q: int = 512, block_k: int = 512,
+                    use_pallas: bool | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """GQA flash attention. q: [B,Hq,Sq,D]; k,v: [B,Hkv,Skv,D]."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        return _ref.mha(q, k, v, causal=causal, window=window, scale=scale)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _k.flash_attention(q, k, v, causal=causal, window=window,
+                              scale=scale, block_q=block_q, block_k=block_k,
+                              interpret=interpret)

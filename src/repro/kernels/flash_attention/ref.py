@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding-window)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_mask(q_len: int, kv_len: int, *, causal: bool,
+                   window: int | None) -> jnp.ndarray:
+    """[q_len, kv_len] boolean mask; True = attend.
+
+    Query positions are the LAST ``q_len`` positions of the ``kv_len``-long
+    sequence (standard prefill/decode alignment)."""
+    q_pos = jnp.arange(q_len)[:, None] + (kv_len - q_len)
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    return mask
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+        causal: bool = True, window: int | None = None,
+        scale: float | None = None) -> jnp.ndarray:
+    """Grouped-query attention.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; Hq % Hkv == 0.
+    Returns [B, Hq, Sq, D] in q.dtype; softmax in float32.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) * scale
+    mask = attention_mask(sq, skv, causal=causal, window=window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)

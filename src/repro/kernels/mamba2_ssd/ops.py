@@ -1,0 +1,30 @@
+"""Jitted public wrapper for the Mamba2 SSD scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba2_ssd import kernel as _k
+from repro.kernels.mamba2_ssd import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssd(x, dt, A, B, C, D, *, chunk: int = 128, use_pallas: bool | None = None,
+        interpret: bool | None = None):
+    """Mamba2 SSD scan: x [Bt,S,H,P], dt [Bt,S,H], A [H], B/C [Bt,S,G,N],
+    D [H] -> y [Bt,S,H,P]."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        y, _ = _ref.ssd_chunked(x, dt, A, B, C, D, chunk=min(chunk, x.shape[1]))
+        return y
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _k.ssd(x, dt, A, B, C, D, chunk=min(chunk, x.shape[1]),
+                  interpret=interpret)
+
+
+ssd_decode_step = jax.jit(_ref.ssd_decode_step)

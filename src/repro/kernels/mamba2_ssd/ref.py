@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space duality) scan.
+
+Discretization (Mamba-2, arXiv:2405.21060):
+    abar_t = exp(dt_t * A_h)                     (scalar per token, head)
+    h_t    = abar_t * h_{t-1} + dt_t * (B_t outer x_t)   (state [N, P])
+    y_t    = C_t . h_t + D_h * x_t
+
+Shapes:
+    x:  [Bt, S, H, P]   (P = head dim)
+    dt: [Bt, S, H]      (post-softplus, > 0)
+    A:  [H]             (negative)
+    B, C: [Bt, S, G, N] (G groups; head h uses group h // (H // G))
+    D:  [H]
+Returns y: [Bt, S, H, P] and the final state [Bt, H, N, P].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(t: jnp.ndarray, h: int) -> jnp.ndarray:
+    """[Bt, S, G, N] -> [Bt, S, H, N] by repeating groups over heads."""
+    g = t.shape[2]
+    return jnp.repeat(t, h // g, axis=2)
+
+
+def ssd_scan(x, dt, A, B, C, D, h0=None):
+    """Sequential reference (lax.scan over time)."""
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    Bh = _expand_groups(B, h).astype(jnp.float32)   # [Bt, S, H, N]
+    Ch = _expand_groups(C, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    state0 = jnp.zeros((bt, h, n, p), jnp.float32) if h0 is None else h0
+
+    def step(state, inp):
+        xt, dtt, bt_, ct = inp                       # [Bt,H,P],[Bt,H],[Bt,H,N],[Bt,H,N]
+        abar = jnp.exp(dtt * A[None, :])             # [Bt, H]
+        upd = jnp.einsum("bhn,bhp->bhnp", bt_, xt * dtt[..., None])
+        state = state * abar[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3) + xf * D[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, h0=None):
+    """Chunked reference -- the same math the Pallas kernel implements."""
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    Bh = _expand_groups(B, h).astype(jnp.float32)
+    Ch = _expand_groups(C, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    # reshape to chunks: [Bt, nc, Q, H, ...]
+    xc = xf.reshape(bt, nc, chunk, h, p)
+    dtc = dtf.reshape(bt, nc, chunk, h)
+    bc = Bh.reshape(bt, nc, chunk, h, n)
+    cc = Ch.reshape(bt, nc, chunk, h, n)
+
+    loga = dtc * A[None, None, None, :]              # [Bt, nc, Q, H]
+    L = jnp.cumsum(loga, axis=2)                     # inclusive
+
+    # intra-chunk: y[t] = sum_{tau<=t} exp(L_t - L_tau) dt_tau (C_t.B_tau) x_tau
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    diff = jnp.where(mask[None, None, :, :, None],
+                     L[:, :, :, None, :] - L[:, :, None, :, :], -1e30)
+    M = jnp.exp(diff)
+    CB = jnp.einsum("bcthn,bcshn->bctsh", cc, bc)    # t=query, s=key
+    y_intra = jnp.einsum("bctsh,bcsh,bcshp->bcthp", CB * M, dtc, xc)
+
+    # inter-chunk state recurrence
+    state = jnp.zeros((bt, h, n, p), jnp.float32) if h0 is None else h0
+    ys = []
+    for c in range(nc):
+        y_inter = jnp.exp(L[:, c])[..., None] * jnp.einsum(
+            "bthn,bhnp->bthp", cc[:, c], state)
+        ys.append(y_intra[:, c] + y_inter)
+        w = jnp.exp(L[:, c, -1:, :] - L[:, c]) * dtc[:, c]   # [Bt, Q, H]
+        upd = jnp.einsum("bthn,bthp->bhnp", bc[:, c], xc[:, c] * w[..., None])
+        state = state * jnp.exp(L[:, c, -1])[:, :, None, None] + upd
+    y = jnp.stack(ys, axis=1).reshape(bt, s, h, p) + xf * D[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def ssd_decode_step(x, dt, A, B, C, D, state):
+    """Single-token recurrent step (serving).
+
+    x: [Bt, H, P]; dt: [Bt, H]; B, C: [Bt, G, N]; state: [Bt, H, N, P].
+    Returns (y [Bt, H, P], new_state).
+    """
+    h = x.shape[1]
+    g = B.shape[1]
+    Bh = jnp.repeat(B, h // g, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, h // g, axis=1).astype(jnp.float32)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    abar = jnp.exp(dtf * A[None, :])
+    upd = jnp.einsum("bhn,bhp->bhnp", Bh, xf * dtf[..., None])
+    state = state * abar[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state) + xf * D[None, :, None]
+    return y.astype(x.dtype), state

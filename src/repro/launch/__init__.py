@@ -1,0 +1,2 @@
+# Launchers: mesh.py (production mesh), dryrun.py (lower/compile all cells),
+# train.py (end-to-end training), serve.py (batched serving).

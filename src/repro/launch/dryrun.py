@@ -1,0 +1,367 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before any other import (jax locks the
+#   device count on first init).  Hence no module docstring above this point.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the production mesh (16x16 single-pod or
+2x16x16 multi-pod), assembles allocation-free ShapeDtypeStruct stand-ins for
+every step input (params, optimizer state, batch / KV cache), lowers and
+compiles the step under pjit shardings, and records:
+
+  * memory_analysis()   -- proves the per-device working set fits
+  * cost_analysis()     -- HLO FLOPs / bytes for the roofline
+  * collective traffic  -- parsed from the optimized HLO text
+  * roofline terms      -- compute / memory / collective seconds (v5e)
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json; EXPERIMENTS.md
+§Dry-run and §Roofline are generated from these artifacts.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+__doc__ = _DOC
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES, applicable, config_for_shape, get_config,
+                           input_specs, list_archs)
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import transformer as T
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.parallel import mesh_ctx, sharding as shd
+from repro.train import trainer as trainer_mod
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _auto_microbatches(cfg, batch: int, seq: int, dp: int) -> int:
+    """Activation-residual heuristic: keep per-device scan residuals under
+    ~6 GB (bf16 carries saved per scan step by the remat'd backward)."""
+    b_loc = max(1, batch // dp)
+    resid = cfg.n_layers * b_loc * seq * cfg.d_model * 2
+    m = 1
+    while resid / m > 6e9 and m < b_loc:
+        m *= 2
+    return m
+
+
+def _probe_cfg(cfg, k: int):
+    """Depth-k unrolled variant for the two-point cost probes.
+
+    XLA's cost analysis counts while-loop bodies ONCE (trip counts are not
+    multiplied in), so FLOPs/bytes/collectives of the scan-over-layers step
+    are wrong by ~n_layers.  The probes lower k=1 and k=2 periods with every
+    loop unrolled; per-cell totals are the linear extrapolation in depth,
+    which is exact for depth-linear costs (layers are homogeneous per
+    period) and leaves the depth-independent base (embedding, head,
+    optimizer scatter) in the intercept."""
+    updates = dict(unroll_layers=True, attn_chunk_q=2048, attn_chunk_k=2048)
+    if cfg.family == "hybrid":
+        updates["ssd_probe_unroll"] = False   # see ModelConfig.ssd_probe_unroll
+    if cfg.family == "encdec":
+        updates.update(n_layers=k, n_encoder_layers=k)
+    else:
+        updates.update(n_layers=cfg.layer_period * k)
+    return dataclasses.replace(cfg, **updates)
+
+
+def _probe_units(cfg) -> int:
+    """Number of depth units the probes extrapolate over."""
+    return cfg.n_layers if cfg.family == "encdec" else cfg.n_periods
+
+
+def _train_step_lowered(cfg, mesh, multi_pod: bool, batch_specs: dict,
+                        force_microbatches: int | None = None):
+    model = Model(cfg)
+    mesh_ctx.set_context(mesh, batch_axes=dp_axes(multi_pod),
+                         tp_axis="model", kv_axes=dp_axes(multi_pod))
+    tcfg = trainer_mod.TrainConfig(
+        microbatches=force_microbatches or _auto_microbatches(
+            cfg, batch_specs["labels"].shape[0], batch_specs["labels"].shape[1],
+            int(np.prod([mesh.shape[a] for a in dp_axes(multi_pod)]))),
+        dp_axes=dp_axes(multi_pod))
+    ocfg = adamw.AdamWConfig()
+    step, params_sh, opt_sh = trainer_mod.make_train_step(
+        model, ocfg, mesh, tcfg)
+    params_sds = model.shapes()
+    opt_sds = jax.eval_shape(functools.partial(adamw.init, ocfg), params_sds)
+    lowered = step.lower(params_sds, opt_sds, batch_specs)
+    return lowered, {"microbatches": tcfg.microbatches,
+                     "params": model.param_count()}
+
+
+def _serve_step_lowered(cfg, mesh, multi_pod: bool, shape_name: str,
+                        batch_specs: dict, kind: str):
+    model = Model(cfg)
+    dp = dp_axes(multi_pod)
+    rules = shd.rule_set(cfg.logical_rules, dp, "model")
+    params_sds = model.shapes()
+    pspecs = shd.params_pspecs(model.axes(), rules, mesh, params_sds)
+    params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                             is_leaf=lambda x: isinstance(x, P))
+    seq = SHAPES[shape_name].seq_len
+    b = (batch_specs.get("tokens") or batch_specs["embeds"]).shape[0]
+
+    mesh_ctx.set_context(mesh, batch_axes=dp, tp_axis="model", kv_axes=dp)
+
+    if kind == "prefill":
+        dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+        bspec = shd.batch_spec(rules) if b % dp_n == 0 else P()
+        batch_sh = {k: NamedSharding(mesh, bspec) for k in batch_specs}
+        if cfg.family == "encdec":
+            # enc-dec prefill = encode the source + fill the cross-attn KV
+            from repro.models import encdec
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(b, seq, src_len=seq))
+            cache_specs = shd.cache_pspecs(cache_sds, mesh, dp_axes=dp,
+                                           tp_axis="model", kv_axes=dp)
+            cache_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), cache_specs,
+                is_leaf=lambda x: isinstance(x, P))
+            fn = jax.jit(
+                lambda params, embeds, cache: encdec.prepare_cross_cache(
+                    cfg, params, embeds, cache),
+                in_shardings=(params_sh, batch_sh["embeds"], cache_sh),
+                out_shardings=cache_sh, donate_argnums=(2,))
+            lowered = fn.lower(params_sds, batch_specs["embeds"], cache_sds)
+            return lowered, {"params": model.param_count()}
+        fn = jax.jit(
+            lambda params, batch: model.prefill(params, batch, max_len=seq),
+            in_shardings=(params_sh, batch_sh))
+        lowered = fn.lower(params_sds, batch_specs)
+        return lowered, {"params": model.param_count()}
+
+    # decode: cache is an input AND output
+    if cfg.family == "encdec":
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(b, seq, src_len=seq))
+    else:
+        cache_sds = jax.eval_shape(lambda: model.init_cache(b, seq))
+    cache_specs = shd.cache_pspecs(cache_sds, mesh, dp_axes=dp,
+                                   tp_axis="model", kv_axes=dp)
+    cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cache_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+    dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+    tok_spec = (shd.batch_spec(rules) if b % dp_n == 0 else P())
+    tok_sh = NamedSharding(mesh, tok_spec)
+
+    def decode(params, tokens, cache, lengths):
+        return model.decode_step(params, tokens, cache, lengths)
+
+    fn = jax.jit(decode,
+                 in_shardings=(params_sh, tok_sh, cache_sh,
+                               NamedSharding(mesh, P())),
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=(2,))
+    lowered = fn.lower(params_sds, batch_specs["tokens"], cache_sds,
+                       batch_specs["lengths"])
+    return lowered, {"params": model.param_count()}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = RESULTS_DIR, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    """Lower+compile one cell; returns (and writes) the result record.
+
+    ``overrides``: ModelConfig field overrides (the §Perf hillclimb lever);
+    ``tag`` suffixes the artifact filename so variants sit beside baselines.
+    """
+    multi_pod = mesh_kind == "multi"
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "status": "ok", "tag": tag,
+                    "overrides": overrides or {}}
+    base = get_config(arch)
+    ok, why = applicable(base, shape_name)
+    if not ok:
+        record.update(status="skipped", reason=why)
+        _write(record, out_dir)
+        return record
+    cfg = config_for_shape(base, shape_name)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        specs = input_specs(cfg, shape_name)
+        t0 = time.monotonic()
+        if shape.kind == "train":
+            lowered, extra = _train_step_lowered(cfg, mesh, multi_pod, specs)
+        else:
+            lowered, extra = _serve_step_lowered(
+                cfg, mesh, multi_pod, shape_name, specs, shape.kind)
+        t_lower = time.monotonic() - t0
+        t0 = time.monotonic()
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0
+
+        cost = H.cost_of(compiled)
+        mem = H.memory_of(compiled)
+        coll = H.parse_collectives(compiled.as_text())
+        n_dev = int(np.prod(list(mesh.shape.values())))
+
+        # --- two-point depth probes (see _probe_cfg docstring) ----------
+        # (single-pod only: §Roofline is defined on the single-pod mesh;
+        #  the multi-pod pass proves compile + the pod-axis sharding)
+        probes = {}
+        for k in (() if multi_pod else (1, 2)):
+            pcfg = _probe_cfg(cfg, k)
+            pspecs = input_specs(pcfg, shape_name)
+            if shape.kind == "train":
+                plow, _ = _train_step_lowered(pcfg, mesh, multi_pod, pspecs,
+                                              force_microbatches=1)
+            else:
+                plow, _ = _serve_step_lowered(pcfg, mesh, multi_pod,
+                                              shape_name, pspecs, shape.kind)
+            pcomp = plow.compile()
+            pcost = H.cost_of(pcomp)
+            pcoll = H.parse_collectives(pcomp.as_text())
+            probes[k] = {
+                "flops": float(pcost.get("flops", 0.0)),
+                "hbm_bytes": float(pcost.get("bytes accessed", 0.0)),
+                "coll_bytes": float(pcoll.total_bytes),
+                "coll_by_op": pcoll.bytes_by_op,
+            }
+        n_units = _probe_units(cfg)
+
+        def lin(key: str) -> float:
+            d = probes[2][key] - probes[1][key]
+            return probes[1][key] + d * (n_units - 1)
+
+        if probes:
+            roof = H.Roofline(
+                flops=lin("flops"), hbm_bytes=lin("hbm_bytes"),
+                coll_bytes_per_device=max(0.0, lin("coll_bytes")),
+                n_devices=n_dev)
+            coll_by_op_ext = {
+                op: probes[1]["coll_by_op"][op] + (n_units - 1) * (
+                    probes[2]["coll_by_op"][op] - probes[1]["coll_by_op"][op])
+                for op in probes[1]["coll_by_op"]}
+        else:  # multi-pod: scan-body costs only (roofline is single-pod)
+            roof = H.Roofline(
+                flops=float(cost.get("flops", 0.0)),
+                hbm_bytes=float(cost.get("bytes accessed", 0.0)),
+                coll_bytes_per_device=float(coll.total_bytes),
+                n_devices=n_dev)
+            coll_by_op_ext = dict(coll.bytes_by_op)
+        tokens = shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1)
+        mf = H.model_flops(cfg.param_count(active_only=True), tokens,
+                           train=(shape.kind == "train")) / n_dev
+        record.update(
+            kind=shape.kind, n_devices=n_dev,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            cost={k: cost[k] for k in sorted(cost)
+                  if isinstance(cost[k], (int, float))
+                  and not k.startswith(("utilization", "bytes accessed"))
+                  or k == "bytes accessed"},
+            memory=mem,
+            collectives_scan_body={"bytes_by_op": coll.bytes_by_op,
+                                   "count_by_op": coll.count_by_op},
+            probes=probes,
+            collectives={"bytes_by_op": coll_by_op_ext,
+                         "total_bytes": roof.coll_bytes_per_device},
+            roofline=roof.as_dict(),
+            model_flops_per_device=mf,
+            useful_flops_ratio=(mf / roof.flops if roof.flops else None),
+            **extra)
+    except Exception as e:  # record failures: they are bugs to fix
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    finally:
+        mesh_ctx.clear_context()
+    _write(record, out_dir)
+    return record
+
+
+def _write(record: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = record.get("tag") or ""
+    suffix = f"__{tag}" if tag else ""
+    name = (f"{record['arch']}__{record['shape']}__{record['mesh']}"
+            f"{suffix}.json")
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(record, f, indent=1, default=float)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--override", action="append", default=[],
+                    help="ModelConfig field override, e.g. remat=dots")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    args = ap.parse_args()
+
+    from repro.models.config import ModelConfig as _MC
+    import dataclasses as _dc
+    _fields = {f.name: f for f in _dc.fields(_MC)}
+    overrides = {}
+    for ov in args.override:
+        key, val = ov.split("=", 1)
+        ftype = str(_fields[key].type)
+        if "int" in ftype:
+            overrides[key] = int(val)
+        elif "float" in ftype and "float8" not in val:
+            overrides[key] = float(val)
+        elif "bool" in ftype:
+            overrides[key] = val.lower() in ("1", "true", "yes")
+        else:
+            overrides[key] = None if val == "none" else val
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                for m in meshes:
+                    cells.append((arch, shape, m))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    for arch, shape, m in cells:
+        path = os.path.join(args.out, f"{arch}__{shape}__{m}.json")
+        if args.skip_existing and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[skip] {arch} {shape} {m}")
+                    continue
+        t0 = time.monotonic()
+        rec = run_cell(arch, shape, m, args.out, overrides=overrides,
+                       tag=args.tag)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" dom={r['dominant']} comp={r['compute_s']:.3g}s "
+                     f"mem={r['memory_s']:.3g}s coll={r['collective_s']:.3g}s")
+        elif status == "error":
+            extra = " " + rec["error"][:120]
+        print(f"[{status}] {arch} {shape} {m} "
+              f"({time.monotonic() - t0:.0f}s){extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Compiled-HLO analysis: collective bytes, roofline terms.
+
+``compiled.cost_analysis()`` gives HLO FLOPs and bytes accessed, but not
+collective traffic -- that is parsed from the optimized HLO text by summing
+operand sizes of every collective op (all-gather, all-reduce, reduce-scatter,
+all-to-all, collective-permute, ragged-all-to-all).
+
+Roofline terms (per EXPERIMENTS.md §Roofline), TPU v5e constants:
+    compute    = HLO_FLOPs   / (chips x 197e12 FLOP/s bf16)
+    memory     = HLO_bytes   / (chips x 819e9  B/s HBM)
+    collective = coll_bytes  / (chips x 50e9   B/s per ICI link)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# -- hardware constants (TPU v5e) -------------------------------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a shape string like 'f32[128,256]{1,0}' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    count_by_op: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective in the optimized HLO.
+
+    Uses the RESULT shape of each collective instruction (per-device view in
+    SPMD-partitioned HLO), a standard proxy for per-device traffic: an
+    all-gather's result is the gathered bytes a device receives; an
+    all-reduce moves ~2x its buffer in a ring (we count 1x -- conservative).
+    """
+    bytes_by_op: dict = {k: 0 for k in COLLECTIVE_OPS}
+    count_by_op: dict = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "%name = f32[...] all-reduce(...)" or fusion-wrapped variants
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},:\s]*?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute|ragged-all-to-all)", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if f"{op}-start" in s and f"{op}-done" not in s:
+            pass  # async start carries the shape; done repeats it -> skip done
+        if re.search(rf"{op}-done", s):
+            continue
+        bytes_by_op[op] += _shape_bytes(m.group(1))
+        count_by_op[op] += 1
+    return CollectiveStats(bytes_by_op, count_by_op)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # PER-DEVICE HLO flops (SPMD module view)
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes_per_device: float
+    n_devices: int
+    ici_links: int = 4           # v5e: 4 ICI links per chip on a 2D torus
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / (self.ici_links * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "n_devices": self.n_devices,
+        }
+
+
+def cost_of(compiled) -> dict:
+    """Best-effort cost_analysis across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)
+
+
+def memory_of(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend without memory analysis
+        return {"error": str(e)}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def model_flops(param_count_active: int, tokens: int,
+                train: bool) -> float:
+    """MODEL_FLOPS = 6ND for training, 2ND for inference forward."""
+    return (6.0 if train else 2.0) * param_count_active * tokens
+
+
+def analytic_hbm_bytes(cfg, shape, *, n_dev: int, dp: int, tp: int,
+                       microbatches: int = 1) -> float:
+    """Analytic per-device HBM traffic model for the TPU target.
+
+    The prescribed HLO 'bytes accessed' counts every op's operands, which on
+    the CPU backend (weak fusion) overstates HBM traffic by the length of
+    the elementwise chains; on TPU, flash-style kernels keep attention
+    intermediates in VMEM.  This model counts the traffic that MUST hit HBM:
+    weights (x3: fwd, remat re-read, bwd), optimizer state, boundary
+    activations, flash KV re-reads, and logits.  Reported alongside the
+    HLO term in §Roofline.
+    """
+    bs, seq, kind = shape.global_batch, shape.seq_len, shape.kind
+    d, f, hd = cfg.d_model, max(cfg.d_ff, 1), cfg.hd
+    hkv = cfg.n_kv_heads
+    P = cfg.param_count()
+    P_active = cfg.param_count(active_only=True)
+    V = cfg.vocab_padded
+    W = 2.0 * P_active / tp          # bf16 weights touched per device pass
+    m = max(1, microbatches)
+
+    if kind == "decode":
+        tokens_loc = max(1, bs // dp)
+        cache = 0.0
+        if cfg.family != "ssm":
+            import jax.numpy as jnp
+            kv_bytes = jnp.dtype(cfg.kv_dtype or cfg.compute_dtype).itemsize
+            n_attn = (cfg.n_layers // cfg.attn_period if cfg.attn_period
+                      else cfg.n_layers)
+            # paged KV is sharded over the DP axes only (model-replicated)
+            kv_shards = dp if cfg.kv_layout == "paged" else n_dev
+            cache = 2.0 * n_attn * bs * seq * hkv * hd * kv_bytes / kv_shards
+        act = cfg.n_layers * tokens_loc * 8 * d * 2
+        logits = tokens_loc * V / tp * 4
+        return 2.0 * P / tp / max(1, dp if cfg.logical_rules == "fsdp_tp"
+                                  else 1) + W + cache + act + logits
+
+    tokens_loc = bs * seq // dp
+    act_width = 4 * d + 3 * f / tp + 2 * cfg.n_heads * hd / tp
+    fwd_bwd = 3.0 if kind == "train" else 1.0   # fwd + remat-fwd + bwd
+    act = cfg.n_layers * (tokens_loc / m) * act_width * 2 * fwd_bwd * m
+    # flash attention KV re-reads: K,V streamed once per 512-row query block
+    n_attn = (cfg.n_layers // cfg.attn_period if cfg.attn_period
+              else (0 if cfg.family == "ssm" else cfg.n_layers))
+    kv_reread = (n_attn * tokens_loc * hkv * hd * 2 * 2
+                 * max(1, min(seq, cfg.window or seq) / 512) / tp)
+    logits = tokens_loc * V / tp * 4 * (3 if kind == "train" else 1)
+    weights = fwd_bwd * m * W
+    opt = (P * 20.0 / n_dev) if kind == "train" else 0.0
+    return weights + opt + act + kv_reread + logits

@@ -1,0 +1,188 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a stub per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings [B, S_src, d_model] to the encoder.  The
+decoder is a standard causal LM with cross-attention; decode shapes lower
+the decoder step with a cached encoder.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import maybe_constrain
+
+Params = dict
+
+
+def encoder_layer_defs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+        "ln2": L.norm_defs(cfg), "mlp": L.mlp_defs(cfg),
+    }
+
+
+def decoder_layer_defs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.norm_defs(cfg), "self_attn": L.attention_defs(cfg),
+        "lnx": L.norm_defs(cfg), "cross_attn": L.attention_defs(cfg),
+        "ln2": L.norm_defs(cfg), "mlp": L.mlp_defs(cfg),
+    }
+
+
+def encdec_defs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": L.embedding_defs(cfg),
+        "enc": L.stack_defs(encoder_layer_defs(cfg), cfg.n_encoder_layers),
+        "dec": L.stack_defs(decoder_layer_defs(cfg), cfg.n_layers),
+        "ln_enc": L.norm_defs(cfg),
+        "ln_f": L.norm_defs(cfg),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, embeds: jax.Array) -> jax.Array:
+    """Frame embeddings [B, S_src, d] -> encoder states."""
+    x = embeds.astype(cfg.compute_dtype)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def step(h, p):
+        a = L.rms_norm(h, p["ln1"]["w"], cfg.rms_eps)
+        h = h + L.attention_block(cfg, p["attn"], a, positions, causal=False)
+        m = L.rms_norm(h, p["ln2"]["w"], cfg.rms_eps)
+        return maybe_constrain(h + L.mlp_block(p["mlp"], m),
+                               ("dp", None, None)), None
+
+    if cfg.remat in ("block", "full"):
+        step = jax.checkpoint(step, prevent_cse=False)
+    if cfg.unroll_layers:
+        for j in range(cfg.n_encoder_layers):
+            x, _ = step(x, jax.tree.map(lambda v: v[j], params["enc"]))
+    else:
+        x, _ = jax.lax.scan(step, x, params["enc"])
+    return L.rms_norm(x, params["ln_enc"]["w"], cfg.rms_eps)
+
+
+def decode_train(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 enc_out: jax.Array) -> jax.Array:
+    """Teacher-forced decoder pass -> hidden states [B, S_tgt, d]."""
+    x = L.embed_tokens(cfg, params["embed"], tokens).astype(cfg.compute_dtype)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def step(h, p):
+        a = L.rms_norm(h, p["ln1"]["w"], cfg.rms_eps)
+        h = h + L.attention_block(cfg, p["self_attn"], a, positions, causal=True)
+        c = L.rms_norm(h, p["lnx"]["w"], cfg.rms_eps)
+        kv = L.encode_kv(cfg, p["cross_attn"], enc_out)
+        h = h + L.cross_attention_block(cfg, p["cross_attn"], c, kv)
+        m = L.rms_norm(h, p["ln2"]["w"], cfg.rms_eps)
+        return maybe_constrain(h + L.mlp_block(p["mlp"], m),
+                               ("dp", None, None)), None
+
+    if cfg.remat in ("block", "full"):
+        step = jax.checkpoint(step, prevent_cse=False)
+    if cfg.unroll_layers:
+        for j in range(cfg.n_layers):
+            x, _ = step(x, jax.tree.map(lambda v: v[j], params["dec"]))
+    else:
+        x, _ = jax.lax.scan(step, x, params["dec"])
+    return L.rms_norm(x, params["ln_f"]["w"], cfg.rms_eps)
+
+
+def lm_loss(cfg: ModelConfig, params: Params, batch: dict) -> jax.Array:
+    enc_out = encode(cfg, params, batch["embeds"])
+    x = decode_train(cfg, params, batch["tokens"], enc_out)
+    logits = L.unembed(cfg, params["embed"], x).astype(jnp.float32)
+    logits = maybe_constrain(logits, ("dp", None, "tp"))
+    if cfg.vocab_padded != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(cfg.vocab_padded) >= cfg.vocab_size,
+                           L.NEG_INF, logits)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction: see transformer.lm_loss (avoids all-gathering
+    # the vocab-sharded logits)
+    onehot = (labels[..., None] ==
+              jnp.arange(cfg.vocab_padded)[None, None, :])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Serving: cached cross-attention KV + self-attention KV cache
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               src_len: int, dtype=None) -> dict:
+    dtype = dtype or cfg.compute_dtype
+    nl, hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((nl, batch_size, hkv, max_len, hd), dtype),
+        "v": jnp.zeros((nl, batch_size, hkv, max_len, hd), dtype),
+        "xk": jnp.zeros((nl, batch_size, hkv, src_len, hd), dtype),
+        "xv": jnp.zeros((nl, batch_size, hkv, src_len, hd), dtype),
+    }
+
+
+def prepare_cross_cache(cfg: ModelConfig, params: Params, embeds: jax.Array,
+                        cache: dict) -> dict:
+    """Run the encoder once and fill the cross-attention K/V."""
+    enc_out = encode(cfg, params, embeds)
+
+    def step(_, p):
+        k, v = L.encode_kv(cfg, p["cross_attn"], enc_out)
+        return None, (k.astype(cache["xk"].dtype), v.astype(cache["xv"].dtype))
+
+    if cfg.unroll_layers:
+        outs = [step(None, jax.tree.map(lambda v: v[j], params["dec"]))[1]
+                for j in range(cfg.n_layers)]
+        xk = jnp.stack([o[0] for o in outs])
+        xv = jnp.stack([o[1] for o in outs])
+    else:
+        _, (xk, xv) = jax.lax.scan(step, None, params["dec"])
+    return dict(cache, xk=xk, xv=xv)
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: dict, lengths: jax.Array):
+    """One decoder token for every sequence (cross KV already prepared)."""
+    x = L.embed_tokens(cfg, params["embed"], tokens).astype(cfg.compute_dtype)
+
+    def step(h, scanees):
+        p, k, v, xk, xv = scanees
+        a = L.rms_norm(h, p["ln1"]["w"], cfg.rms_eps)
+        out, k, v = L.decode_attention_block(cfg, p["self_attn"], a, k, v,
+                                             lengths)
+        h = h + out
+        c = L.rms_norm(h, p["lnx"]["w"], cfg.rms_eps)
+        h = h + L.cross_attention_block(cfg, p["cross_attn"], c, (xk, xv))
+        m = L.rms_norm(h, p["ln2"]["w"], cfg.rms_eps)
+        h = h + L.mlp_block(p["mlp"], m)
+        return h, (k, v)
+
+    if cfg.unroll_layers:
+        ks, vs = [], []
+        for j in range(cfg.n_layers):
+            x, (kj, vj) = step(x, tuple(
+                jax.tree.map(lambda t: t[j], s)
+                for s in (params["dec"], cache["k"], cache["v"],
+                          cache["xk"], cache["xv"])))
+            ks.append(kj)
+            vs.append(vj)
+        k, v = jnp.stack(ks), jnp.stack(vs)
+    else:
+        x, (k, v) = jax.lax.scan(
+            step, x, (params["dec"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+    x = L.rms_norm(x, params["ln_f"]["w"], cfg.rms_eps)
+    logits = L.unembed(cfg, params["embed"], x[:, -1]).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(cfg.vocab_padded) >= cfg.vocab_size,
+                           L.NEG_INF, logits)
+    return logits, dict(cache, k=k, v=v)

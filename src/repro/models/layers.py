@@ -1,0 +1,426 @@
+"""Model building blocks: params tables, norms, RoPE, attention, MLP.
+
+Parameters are plain nested dicts of arrays.  Every module exposes
+``*_defs(cfg)`` returning a matching nested dict of :class:`ParamDef`
+(shape + logical axes + initializer), from which ``build_params`` /
+``build_axes`` derive the weights and the sharding-rule inputs.
+
+Logical axis names used across the framework:
+  "layers"   -- scan-stacked layer dimension
+  "embed"    -- d_model
+  "q_heads"  -- flattened n_heads * head_dim
+  "kv_heads" -- flattened n_kv_heads * head_dim
+  "mlp"      -- d_ff
+  "experts"  -- MoE expert dimension
+  "vocab"    -- (padded) vocabulary
+  "ssm_inner"-- mamba inner width
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = dict  # nested dict pytree of arrays
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter tables
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | ssm_a | ssm_dt
+    scale: float | None = None    # stddev for "normal" (default fan-in)
+
+    def initialize(self, key, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "ssm_a":      # A_log: log of uniform [1, 16]
+            u = jax.random.uniform(key, self.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dtype)
+        if self.init == "ssm_dt":     # dt bias: log of uniform [1e-3, 1e-1]
+            u = jax.random.uniform(key, self.shape, jnp.float32,
+                                   math.log(1e-3), math.log(1e-1))
+            return u.astype(dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+        std = self.scale if self.scale is not None else fan_in ** -0.5
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(dtype)
+
+
+def build_params(defs: dict, key: jax.Array, dtype) -> Params:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [d.initialize(k, dtype)
+                                        for d, k in zip(leaves, keys)])
+
+
+def build_axes(defs: dict) -> dict:
+    return jax.tree.map(lambda d: d.axes, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def build_shapes(defs: dict, dtype) -> dict:
+    """ShapeDtypeStruct pytree (for allocation-free dry runs)."""
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def stack_defs(defs: dict, n: int) -> dict:
+    """Prepend a scan ("layers") dimension to every ParamDef."""
+    def f(d: ParamDef) -> ParamDef:
+        return ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale)
+    return jax.tree.map(f, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Norms and positional encodings
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: [..., S, D] (D even); positions: [..., S].
+
+    M-RoPE (qwen2-vl) degenerates to 1-D RoPE for text-shaped inputs; the
+    vision frontend is a stub (DESIGN.md §4), so the temporal section is the
+    only active one and this is exact for the assigned shapes.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def attention_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    defs = {
+        "wq": ParamDef((d, nq), ("embed", "q_heads")),
+        "wk": ParamDef((d, nkv), ("embed", "kv_heads")),
+        "wv": ParamDef((d, nkv), ("embed", "kv_heads")),
+        "wo": ParamDef((nq, d), ("q_heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((nq,), ("q_heads",), "zeros")
+        defs["bk"] = ParamDef((nkv,), ("kv_heads",), "zeros")
+        defs["bv"] = ParamDef((nkv,), ("kv_heads",), "zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), "ones")
+        defs["k_norm"] = ParamDef((hd,), (None,), "ones")
+    return defs
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, x: jax.Array,
+                 positions: jax.Array, rotary: bool = True):
+    """x: [B, S, d] -> q [B, H, S, hd], k/v [B, Hkv, S, hd]."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    if rotary:
+        q = rope(q, positions[:, None, :], cfg.rope_theta)
+        k = rope(k, positions[:, None, :], cfg.rope_theta)
+    if cfg.constrain_inner:
+        from repro.parallel.sharding import maybe_constrain
+        q = maybe_constrain(q, ("dp", "tp", None, None))
+        k = maybe_constrain(k, ("dp", "tp", None, None))
+        v = maybe_constrain(v, ("dp", "tp", None, None))
+    return q, k, v
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, window: int | None,
+                      chunk_q: int, chunk_k: int,
+                      kv_valid_len: jax.Array | None = None) -> jax.Array:
+    """Flash-equivalent attention in pure lax: online softmax over KV chunks,
+    sequential scan over Q chunks.  Never materializes the [Sq, Skv] logits,
+    so the lowered HLO has the same memory profile as the Pallas kernel
+    (DESIGN.md: the dry-run roofline reads this path).
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D].
+    kv_valid_len: [B] optional valid KV prefix lengths.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    scale = d ** -0.5
+
+    def pick(s: int, c: int) -> int:
+        c = min(c, s)
+        while s % c:
+            c -= 1
+        return c
+
+    cq, ck = pick(sq, chunk_q), pick(skv, chunk_k)
+    nq, nk = sq // cq, skv // ck
+    qf = q.reshape(b, hkv, g, nq, cq, d).astype(jnp.float32) * scale
+    kf = k.reshape(b, hkv, nk, ck, d).astype(jnp.float32)
+    vf = v.reshape(b, hkv, nk, ck, d).astype(jnp.float32)
+    q_base = skv - sq  # queries sit at the tail of the kv sequence
+
+    def q_step(_, qi_and_chunk):
+        qi, qc = qi_and_chunk                       # qc: [B, Hkv, G, cq, D]
+        q_pos = q_base + qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, kj_and_chunks):
+            m, l, acc = carry
+            kj, kc, vc = kj_and_chunks              # kc/vc: [B, Hkv, ck, D]
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc)
+            k_pos = kj * ck + jnp.arange(ck)
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            mask = jnp.broadcast_to(mask, s.shape[:-2] + mask.shape)
+            if kv_valid_len is not None:
+                mask &= (k_pos[None, :] < kv_valid_len[:, None])[
+                    :, None, None, None, :]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask, p, 0.0)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vc)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kf.transpose(2, 0, 1, 3, 4),
+             vf.transpose(2, 0, 1, 3, 4)))
+        out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (jnp.arange(nq), qf.transpose(3, 0, 1, 2, 4, 5)))
+    # outs: [nq, B, Hkv, G, cq, D]
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, sq, d)
+    return out.astype(q.dtype)
+
+
+def chunked_attention_unrolled(q, k, v, *, causal: bool, window: int | None,
+                               chunk_q: int, chunk_k: int) -> jax.Array:
+    """Unrolled flash-equivalent attention: python loop over (qi, kj) chunk
+    pairs, SKIPPING fully-masked pairs.  Two uses: (1) dry-run cost probes
+    (XLA cost analysis ignores while trip counts; this makes every block's
+    FLOPs visible), (2) the true-causal FLOP count -- masked blocks cost
+    zero here, vs half-wasted work in the scan form (§Perf iteration)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    scale = d ** -0.5
+
+    def pick(s, c):
+        c = min(c, s)
+        while s % c:
+            c -= 1
+        return c
+
+    cq, ck = pick(sq, chunk_q), pick(skv, chunk_k)
+    nq, nk = sq // cq, skv // ck
+    q_base = skv - sq
+    qf = q.reshape(b, hkv, g, nq, cq, d).astype(jnp.float32) * scale
+    kf = k.reshape(b, hkv, nk, ck, d).astype(jnp.float32)
+    vf = v.reshape(b, hkv, nk, ck, d).astype(jnp.float32)
+    outs = []
+    for qi in range(nq):
+        q_lo, q_hi = q_base + qi * cq, q_base + (qi + 1) * cq - 1
+        m = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        acc = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+        for kj in range(nk):
+            k_lo, k_hi = kj * ck, (kj + 1) * ck - 1
+            if causal and k_lo > q_hi:
+                continue                      # fully above the diagonal
+            if window is not None and k_hi < q_lo - window + 1:
+                continue                      # fully left of every window
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qf[:, :, :, qi], kf[:, :, kj])
+            q_pos = q_lo + jnp.arange(cq)[:, None]
+            k_pos = k_lo + jnp.arange(ck)[None, :]
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= q_pos >= k_pos
+            if window is not None:
+                mask &= (q_pos - k_pos) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vf[:, :, kj])
+            m = m_new
+        outs.append(acc / jnp.where(l == 0.0, 1.0, l)[..., None])
+    out = jnp.stack(outs, axis=3)             # [B, Hkv, G, nq, cq, D]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def full_attention(cfg: ModelConfig, q, k, v, *, causal: bool,
+                   window: int | None, kv_valid_len=None) -> jax.Array:
+    """Dispatch on cfg.attn_impl."""
+    impl = cfg.attn_impl
+    if cfg.unroll_layers and impl == "chunked":
+        impl = "chunked_unrolled"
+    if impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention
+        assert kv_valid_len is None
+        return flash_attention(q, k, v, causal=causal, window=window)
+    if impl == "ref":
+        from repro.kernels.flash_attention import ref as fa_ref
+        assert kv_valid_len is None
+        return fa_ref.mha(q, k, v, causal=causal, window=window)
+    if impl == "chunked_unrolled":
+        assert kv_valid_len is None
+        return chunked_attention_unrolled(
+            q, k, v, causal=causal, window=window,
+            chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k,
+                             kv_valid_len=kv_valid_len)
+
+
+def attention_block(cfg: ModelConfig, p: Params, x: jax.Array,
+                    positions: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Full-sequence attention (train / prefill without cache)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    out = full_attention(cfg, q, k, v, causal=causal, window=cfg.window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+    return out @ p["wo"]
+
+
+def cross_attention_block(cfg: ModelConfig, p: Params, x: jax.Array,
+                          kv_cache: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    b, s, d = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k, v = kv_cache
+    out = full_attention(cfg, q, k, v, causal=False, window=None)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+    return out @ p["wo"]
+
+
+def encode_kv(cfg: ModelConfig, p: Params, enc_out: jax.Array):
+    """Precompute cross-attention K/V from encoder output."""
+    b, s, _ = enc_out.shape
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def decode_attention_block(cfg: ModelConfig, p: Params, x: jax.Array,
+                           k_cache: jax.Array, v_cache: jax.Array,
+                           lengths: jax.Array):
+    """One-token decode with a batch-layout cache.
+
+    x: [B, 1, d]; k_cache/v_cache: [B, Hkv, S_max, hd]; lengths: [B] count
+    INCLUDING the new token.  Returns (out [B, 1, d], k_cache, v_cache).
+    """
+    b = x.shape[0]
+    hd = cfg.hd
+    positions = (lengths - 1)[:, None]                    # [B, 1]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    # write the new token at position lengths-1
+    idx = (lengths - 1)[:, None, None, None]
+    pos = jnp.arange(k_cache.shape[2])[None, None, :, None]
+    k_cache = jnp.where(pos == idx, k_new.astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(pos == idx, v_new.astype(v_cache.dtype), v_cache)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.decode_attention import decode_attention as dec
+        out = dec(q[:, :, 0], k_cache, v_cache, lengths, window=cfg.window)
+    else:
+        from repro.kernels.decode_attention import ref as dec_ref
+        out = dec_ref.decode_attention(q[:, :, 0], k_cache, v_cache, lengths,
+                                       window=cfg.window)
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    return out @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "w_gate": ParamDef((d, f), ("embed", "mlp")),
+        "w_up": ParamDef((d, f), ("embed", "mlp")),
+        "w_down": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_block(p: Params, x: jax.Array, constrain: bool = False) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    if constrain:
+        from repro.parallel.sharding import maybe_constrain
+        h = maybe_constrain(h, ("dp",) + (None,) * (h.ndim - 2) + ("tp",))
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / head
+# ---------------------------------------------------------------------------
+def embedding_defs(cfg: ModelConfig) -> dict:
+    defs = {"tok": ParamDef((cfg.vocab_padded, cfg.d_model),
+                            ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((cfg.d_model, cfg.vocab_padded),
+                                ("embed", "vocab"))
+    return defs
+
+
+def embed_tokens(cfg: ModelConfig, p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], ids, axis=0)
+
+
+def unembed(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ p["tok"].T
+    return x @ p["head"]
+
+
+def norm_defs(cfg: ModelConfig) -> dict:
+    return {"w": ParamDef((cfg.d_model,), (None,), "ones")}

@@ -1,0 +1,63 @@
+"""Model facade: one object tying config, params, loss and serving paths."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, layers as L, transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters -----------------------------------------------------------
+    @functools.cached_property
+    def defs(self) -> dict:
+        if self.cfg.family == "encdec" or self.cfg.n_encoder_layers:
+            return encdec.encdec_defs(self.cfg)
+        return T.decoder_defs(self.cfg)
+
+    def init(self, key: jax.Array) -> dict:
+        return L.build_params(self.defs, key, jnp.dtype(self.cfg.param_dtype))
+
+    def axes(self) -> dict:
+        return L.build_axes(self.defs)
+
+    def shapes(self, dtype=None) -> dict:
+        return L.build_shapes(self.defs,
+                              jnp.dtype(dtype or self.cfg.param_dtype))
+
+    def param_count(self) -> int:
+        import numpy as np
+        leaves = jax.tree.leaves(self.shapes())
+        return int(sum(np.prod(l.shape) for l in leaves))
+
+    # -- training -------------------------------------------------------------
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        if self.cfg.family == "encdec":
+            return encdec.lm_loss(self.cfg, params, batch)
+        return T.lm_loss(self.cfg, params, batch)
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int,
+                   src_len: int | None = None, dtype=None) -> dict:
+        if self.cfg.family == "encdec":
+            return encdec.init_cache(self.cfg, batch_size, max_len,
+                                     src_len or max_len, dtype)
+        return T.init_cache(self.cfg, batch_size, max_len, dtype)
+
+    def prefill(self, params: dict, batch: dict, max_len: int):
+        if self.cfg.family == "encdec":
+            raise NotImplementedError("encdec prefill = prepare_cross_cache")
+        return T.prefill(self.cfg, params, batch, max_len)
+
+    def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
+                    lengths: jax.Array):
+        if self.cfg.family == "encdec":
+            return encdec.decode_step(self.cfg, params, tokens, cache, lengths)
+        return T.decode_step(self.cfg, params, tokens, cache, lengths)

@@ -1,0 +1,167 @@
+"""Mixture-of-Experts MLP with capacity-based scatter dispatch.
+
+Top-k routing with a fixed per-expert capacity (tokens over capacity are
+dropped, standard TPU practice); dispatch and combine are scatter/gather of
+token rows -- O(T*k*d) traffic, NOT the dense O(T*E*C) one-hot einsum and NOT
+the every-expert-computes-every-token fallback (which would misstate MoE
+FLOPs by E/k).  Expert weights carry the "experts" logical axis, sharded
+over the "model" mesh axis (EP); under pjit, GSPMD turns the scatter/gather
+into the expert all-to-all.
+
+Supports shared experts (qwen2-moe: shared experts always run, dense).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamDef, Params, mlp_block, mlp_defs
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    e = cfg.n_experts
+    de = cfg.d_expert or cfg.d_ff
+    defs = {
+        "router": ParamDef((d, e), ("embed", "experts")),
+        "w_gate": ParamDef((e, d, de), ("experts", "embed", "mlp")),
+        "w_up": ParamDef((e, d, de), ("experts", "embed", "mlp")),
+        "w_down": ParamDef((e, de, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = mlp_defs(cfg, d_ff=cfg.n_shared_experts * de)
+        defs["shared_gate"] = ParamDef((d, 1), ("embed", None))
+    return defs
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(math.ceil(n_tokens * cfg.n_experts_active / cfg.n_experts
+                        * cfg.moe_capacity_factor))
+    return max(1, min(cap, n_tokens))
+
+
+def moe_block(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d].  Dispatch selected by cfg.moe_dispatch."""
+    if cfg.moe_dispatch == "sort":
+        return moe_block_sorted(cfg, p, x)
+    return moe_block_scatter(cfg, p, x)
+
+
+def moe_block_scatter(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Scatter-based dispatch (baseline)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    t = b * s
+    xt = x.reshape(t, d)
+    cap = moe_capacity(cfg, t)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)                     # [T, k]
+    weights = weights / weights.sum(-1, keepdims=True)
+
+    flat_e = idx.reshape(t * k)                                # [T*k]
+    # position of each (token, choice) within its expert's buffer
+    onehot = flat_e[:, None] == jnp.arange(e)[None, :]         # [T*k, E]
+    pos = (jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1)
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    row = jnp.where(keep, flat_e, e)                           # row e -> dropped
+    col = jnp.where(keep, pos, 0)
+
+    xr = jnp.repeat(xt, k, axis=0)                             # [T*k, d]
+    buf = jnp.zeros((e, cap, d), x.dtype).at[row, col].set(xr, mode="drop")
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])       # [E, C, d]
+
+    gathered = out_buf[jnp.where(keep, flat_e, 0), col]        # [T*k, d]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = (gathered.reshape(t, k, d)
+         * weights[..., None].astype(x.dtype)).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        gate = jax.nn.sigmoid((xt @ p["shared_gate"]).astype(jnp.float32))
+        y = y + mlp_block(p["shared"], xt) * gate.astype(x.dtype)
+    return y.reshape(b, s, d)
+
+
+def moe_block_sorted(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Gather-only dispatch: argsort by expert + dense one-hot positions.
+
+    GSPMD partitions the scatter in moe_block_scatter as a dense one-hot
+    contraction (observed: ~800x FLOP inflation on the qwen2-moe probes);
+    this variant builds the expert buffers purely with sorts and gathers,
+    which partition cleanly (§Perf cell B)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    t = b * s
+    xt = x.reshape(t, d)
+    cap = moe_capacity(cfg, t)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)
+    weights = weights / weights.sum(-1, keepdims=True)
+
+    flat_e = idx.reshape(t * k)                                # [T*k]
+    onehot = flat_e[:, None] == jnp.arange(e)[None, :]         # [T*k, E]
+    counts = onehot.sum(0)                                     # [E]
+    starts = jnp.cumsum(counts) - counts                       # exclusive, [E]
+    # positions via double argsort, NOT a length-T cumsum: XLA lowers long
+    # cumsums to reduce-window whose cost (and on some backends, work) is
+    # O(T * window); two sorts are O(T log T) and partition cleanly.
+    order = jnp.argsort(flat_e, stable=True)                   # group by expert
+    sorted_e = jnp.take(flat_e, order)
+    pos_sorted = jnp.arange(t * k) - jnp.take(starts, sorted_e)
+    inv = jnp.argsort(order)                                   # inverse perm
+    pos = jnp.take(pos_sorted, inv)                            # [T*k]
+    keep = pos < cap
+    # buffer slot (e, c) holds sorted element starts[e] + c (if c < counts[e])
+    gidx = starts[:, None] + jnp.arange(cap)[None, :]          # [E, C]
+    valid = jnp.arange(cap)[None, :] < counts[:, None]
+    tok_choice = jnp.take(order, jnp.clip(gidx, 0, t * k - 1)) # [E, C]
+    buf = jnp.take(xt, tok_choice // k, axis=0)                # gather
+    buf = jnp.where(valid[..., None], buf, 0)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])       # [E, C, d]
+
+    gathered = out_buf[jnp.where(keep, flat_e, 0),
+                       jnp.where(keep, pos, 0)]                # gather
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = (gathered.reshape(t, k, d)
+         * weights[..., None].astype(x.dtype)).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        gate = jax.nn.sigmoid((xt @ p["shared_gate"]).astype(jnp.float32))
+        y = y + mlp_block(p["shared"], xt) * gate.astype(x.dtype)
+    return y.reshape(b, s, d)
+
+
+def moe_block_dense_oracle(cfg: ModelConfig, p: Params, x: jax.Array,
+                           drop: bool = False) -> jax.Array:
+    """Every-expert-computes-every-token oracle (tests only)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.n_experts_active)
+    weights = weights / weights.sum(-1, keepdims=True)
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(t)[:, None], idx].set(weights)              # [T, E]
+    h = jnp.einsum("td,edf->tef", xt, p["w_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("td,edf->tef", xt, p["w_up"])
+    outs = jnp.einsum("tef,efd->ted", h, p["w_down"])
+    y = jnp.einsum("ted,te->td", outs, gates.astype(x.dtype))
+    if cfg.n_shared_experts:
+        de = cfg.d_expert or cfg.d_ff
+        gate = jax.nn.sigmoid((xt @ p["shared_gate"]).astype(jnp.float32))
+        y = y + mlp_block(p["shared"], xt) * gate.astype(x.dtype)
+    return y.reshape(b, s, d)

@@ -1,0 +1,175 @@
+"""Mamba2 (SSD) block: in-proj, causal conv, selective scan, gated norm.
+
+Follows the Mamba-2 architecture (arXiv:2405.21060): a single input
+projection produces [z | xBC | dt]; a depthwise causal conv runs over the
+xBC channels; the SSD scan uses the chunked state-space-duality algorithm
+(`repro.kernels.mamba2_ssd`); output is gated-RMS-normed and projected back.
+
+The sequence scan over chunks is a `lax.scan` (one chunk per step, state
+carried), so HLO size is independent of sequence length -- required for the
+500k-token dry-runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamDef, Params, rms_norm
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * g * n
+    return {
+        "w_in": ParamDef((d, 2 * di + 2 * g * n + h), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_ch), (None, "ssm_inner"),
+                           scale=cfg.ssm_conv ** -0.5),
+        "conv_b": ParamDef((conv_ch,), ("ssm_inner",), "zeros"),
+        "a_log": ParamDef((h,), (None,), "ssm_a"),
+        "dt_bias": ParamDef((h,), (None,), "ssm_dt"),
+        "d_skip": ParamDef((h,), (None,), "ones"),
+        "norm_w": ParamDef((di,), ("ssm_inner",), "ones"),
+        "w_out": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split(cfg: ModelConfig, zxbcdt: jax.Array):
+    di = cfg.d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * gn]
+    dt = zxbcdt[..., 2 * di + 2 * gn:]
+    return z, xbc, dt
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B, S, C]; w: [K, C]."""
+    k, c = w.shape
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :], window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=c)
+    return out + b
+
+
+def _ssd_chunk_scan(cfg: ModelConfig, x, dt, A, B, C, D, h0=None):
+    """Chunked SSD via lax.scan over chunks (constant HLO size in S).
+
+    x: [Bt, S, H, P]; dt: [Bt, S, H]; B/C: [Bt, S, G, N].
+    Returns (y, final_state [Bt, H, N, P]).
+    """
+    bt, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(cfg.ssd_chunk, s)
+    while s % q:          # largest divisor of s not exceeding the chunk size
+        q -= 1
+    nc = s // q
+    hpg = h // g
+    xf = x.astype(jnp.float32).reshape(bt, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bt, nc, q, h)
+    Bf = B.astype(jnp.float32).reshape(bt, nc, q, g, n)
+    Cf = C.astype(jnp.float32).reshape(bt, nc, q, g, n)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def step(state, inp):
+        xc, dtc, bc, cc = inp          # [Bt,q,H,P],[Bt,q,H],[Bt,q,G,N]x2
+        bh = jnp.repeat(bc, hpg, axis=2)              # [Bt,q,H,N]
+        ch = jnp.repeat(cc, hpg, axis=2)
+        loga = dtc * A[None, None, :]
+        lcum = jnp.cumsum(loga, axis=1)               # [Bt,q,H]
+        # mask INSIDE the exp: masked entries are exp(+large)=inf, and the
+        # backward of where(mask, inf, 0) is inf*0 = NaN
+        diff = jnp.where(tri[None, :, :, None],
+                         lcum[:, :, None, :] - lcum[:, None, :, :], -1e30)
+        m = jnp.exp(diff)
+        cb = jnp.einsum("bthn,bshn->btsh", ch, bh)
+        y = jnp.einsum("btsh,bsh,bshp->bthp", cb * m, dtc, xc)
+        y += jnp.exp(lcum)[..., None] * jnp.einsum("bthn,bhnp->bthp", ch, state)
+        w = jnp.exp(lcum[:, -1:, :] - lcum) * dtc      # [Bt,q,H]
+        upd = jnp.einsum("bthn,bthp->bhnp", bh, xc * w[..., None])
+        state = state * jnp.exp(lcum[:, -1])[:, :, None, None] + upd
+        return state, y
+
+    state0 = jnp.zeros((bt, h, n, p), jnp.float32) if h0 is None else h0
+    if cfg.unroll_layers and cfg.ssd_probe_unroll:
+        # python loop over chunks (dry-run cost probes; see ModelConfig)
+        state = state0
+        ys_list = []
+        for c in range(nc):
+            state, y_c = step(state, (xf[:, c], dtf[:, c], Bf[:, c], Cf[:, c]))
+            ys_list.append(y_c)
+        ys = jnp.stack(ys_list, axis=0)
+    else:
+        xs = (xf.transpose(1, 0, 2, 3, 4), dtf.transpose(1, 0, 2, 3),
+              Bf.transpose(1, 0, 2, 3, 4), Cf.transpose(1, 0, 2, 3, 4))
+        state, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bt, s, h, p)
+    y += xf.reshape(bt, s, h, p) * D[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def ssm_block(cfg: ModelConfig, p: Params, x: jax.Array,
+              return_state: bool = False):
+    """Full-sequence Mamba2 mixer. x: [B, S, d] -> [B, S, d]."""
+    b, s, _ = x.shape
+    h, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    zxbcdt = x @ p["w_in"]
+    z, xbc_pre, dt = _split(cfg, zxbcdt)
+    xbc = jax.nn.silu(causal_conv(xbc_pre, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :cfg.d_inner].reshape(b, s, h, pd)
+    Bm = xbc[..., cfg.d_inner:cfg.d_inner + g * n].reshape(b, s, g, n)
+    Cm = xbc[..., cfg.d_inner + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.mamba2_ssd import ssd as ssd_op
+        y = ssd_op(xs, dt, A, Bm, Cm, p["d_skip"].astype(jnp.float32),
+                   chunk=cfg.ssd_chunk)
+        state = None
+    else:
+        y, state = _ssd_chunk_scan(cfg, xs, dt, A, Bm, Cm,
+                                   p["d_skip"].astype(jnp.float32))
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_w"], cfg.rms_eps)
+    out = y @ p["w_out"]
+    if return_state:
+        conv_tail = xbc_pre[:, -(cfg.ssm_conv - 1):, :]
+        return out, (conv_tail, state)
+    return out
+
+
+def ssm_decode_step(cfg: ModelConfig, p: Params, x: jax.Array,
+                    conv_state: jax.Array, ssd_state: jax.Array):
+    """One-token recurrent step.
+
+    x: [B, 1, d]; conv_state: [B, conv-1, conv_ch]; ssd_state: [B,H,N,P].
+    Returns (out [B, 1, d], conv_state, ssd_state).
+    """
+    b = x.shape[0]
+    h, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    z, xbc, dt = _split(cfg, x @ p["w_in"])
+    # conv over the stored window + new input
+    win = jnp.concatenate([conv_state, xbc], axis=1)      # [B, K, C]
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)
+    conv_state = win[:, 1:, :]
+    xs = xbc_t[:, :cfg.d_inner].reshape(b, h, pd)
+    Bm = xbc_t[:, cfg.d_inner:cfg.d_inner + g * n].reshape(b, g, n)
+    Cm = xbc_t[:, cfg.d_inner + g * n:].reshape(b, g, n)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    from repro.kernels.mamba2_ssd import ref as ssd_ref
+    y, ssd_state = ssd_ref.ssd_decode_step(
+        xs, dtv, A, Bm, Cm, p["d_skip"].astype(jnp.float32), ssd_state)
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_w"], cfg.rms_eps)
+    out = (y @ p["w_out"]).astype(x.dtype)
+    return out, conv_state.astype(x.dtype), ssd_state

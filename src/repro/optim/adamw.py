@@ -1,0 +1,83 @@
+"""AdamW with mixed-precision master weights (pure-jax, pytree-first).
+
+When model params are bf16, the optimizer keeps float32 master copies and
+moments; updates apply in float32 and the bf16 params are re-cast views.
+Global-norm clipping included (essential at 1000-node scale where a single
+bad batch otherwise requires a rollback).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    keep_master: bool = True      # f32 master copies for sub-f32 params
+
+
+def init(cfg: AdamWConfig, params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+    if cfg.keep_master and any(
+            l.dtype != jnp.float32 for l in jax.tree.leaves(params)):
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads, state: dict, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else cfg.lr
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    masters = state.get("master", params)
+
+    def upd(g, mu, nu, w):
+        g = g.astype(jnp.float32)
+        w = w.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        w = w - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * w)
+        return mu, nu, w
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    flat_w = tdef.flatten_up_to(masters)
+    out = [upd(g, m, n, w) for g, m, n, w in
+           zip(flat_g, flat_mu, flat_nu, flat_w)]
+    mu = tdef.unflatten([o[0] for o in out])
+    nu = tdef.unflatten([o[1] for o in out])
+    new_masters = tdef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), new_masters, params)
+    new_state = {"step": step, "mu": mu, "nu": nu}
+    if "master" in state:
+        new_state["master"] = new_masters
+    return new_params, new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}

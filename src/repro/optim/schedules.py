@@ -1,0 +1,22 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor * peak_lr``."""
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(1, warmup_steps)
+        t = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                     0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)

@@ -1,0 +1,1 @@
+from repro.parallel import mesh_ctx, sharding  # noqa: F401

@@ -1,0 +1,51 @@
+"""Process-wide mesh context.
+
+The launcher (or a test) installs the active mesh plus the axis assignment
+once; model code that needs explicit collectives (the paged/EMem decode
+path) reads it from here.  When no context is installed (single-device unit
+tests), callers fall back to mesh-free single-shard implementations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    mesh: Mesh
+    batch_axes: tuple[str, ...] = ("data",)   # DP/FSDP axes
+    tp_axis: str = "model"                    # tensor-parallel axis
+    kv_axes: tuple[str, ...] = ("data",)      # EMem page-owner axes
+
+    @property
+    def n_kv_shards(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.kv_axes]))
+
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+
+_CTX: MeshContext | None = None
+
+
+def set_context(mesh: Mesh, *, batch_axes: Sequence[str] = ("data",),
+                tp_axis: str = "model",
+                kv_axes: Sequence[str] | None = None) -> MeshContext:
+    global _CTX
+    _CTX = MeshContext(mesh, tuple(batch_axes), tp_axis,
+                       tuple(kv_axes if kv_axes is not None else batch_axes))
+    return _CTX
+
+
+def get_context() -> MeshContext | None:
+    return _CTX
+
+
+def clear_context() -> None:
+    global _CTX
+    _CTX = None

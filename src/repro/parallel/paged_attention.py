@@ -1,0 +1,161 @@
+"""Paged decode attention over an emulated KV memory (DESIGN.md §3.1).
+
+The KV cache is a flat store of pages cyclically owned by the devices of the
+``kv_axes`` mesh axes -- the paper's emulated-memory distribution
+(`repro.core.emem` addressing).  Decoding one token:
+
+  1. the new K/V row is *written* to its owning shard (the paper's WRITE
+     message; here a masked scatter since every shard runs the same SPMD
+     program);
+  2. each shard computes partial flash-decode statistics over the pages it
+     owns (compute-to-data: the paper's remote DMA READ inverted -- instead
+     of moving pages to the client we move the tiny query to the pages,
+     which is the TPU-native optimization recorded in DESIGN.md §2);
+  3. partials are merged with a log-sum-exp-weighted psum over ``kv_axes``.
+
+Query heads stay sharded over the tensor-parallel axis; K/V pages are
+replicated over it (GQA KV is small).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.parallel import mesh_ctx
+
+NEG_INF = -1e30
+
+
+def _flat_axis_index(axes: tuple[str, ...]) -> jax.Array:
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _partial_paged_attention(cfg: ModelConfig, q, k_pages, v_pages, lengths,
+                             *, sid, n_shards: int, max_pages: int,
+                             head_start):
+    """Partial attention of q against this shard's pages.
+
+    q: [B, Hl, hd] (local heads); k/v_pages: [np_loc, slots, Hkv, hd];
+    Returns (acc [B, Hl, hd] unnormalized, m [B, Hl], l [B, Hl])."""
+    b, hl, hd = q.shape
+    np_loc, slots, hkv, _ = k_pages.shape
+    scale = hd ** -0.5
+    group = cfg.n_heads // cfg.n_kv_heads
+
+    # which sequence / in-sequence position each local token belongs to
+    g_all = jnp.arange(np_loc) * n_shards + sid            # global page ids
+    b_of = g_all // max_pages                              # [np_loc]
+    pos = (g_all % max_pages)[:, None] * slots + jnp.arange(slots)
+    tok_b = jnp.broadcast_to(b_of[:, None], pos.shape).reshape(-1)
+    tok_pos = pos.reshape(-1)                              # [T_loc]
+
+    # per-local-head KV head selection
+    kvh = (head_start + jnp.arange(hl)) // group           # [Hl]
+    kf = k_pages.reshape(np_loc * slots, hkv, hd).astype(jnp.float32)
+    vf = v_pages.reshape(np_loc * slots, hkv, hd).astype(jnp.float32)
+    k_sel = jnp.take(kf, kvh, axis=1)                      # [T_loc, Hl, hd]
+    v_sel = jnp.take(vf, kvh, axis=1)
+
+    logits = jnp.einsum("bhd,thd->bht", q.astype(jnp.float32), k_sel) * scale
+    valid = (tok_b[None, :] == jnp.arange(b)[:, None]) & \
+        (tok_pos[None, :] < lengths[:, None])              # [B, T_loc]
+    if cfg.window is not None:
+        valid &= tok_pos[None, :] >= (lengths[:, None] - cfg.window)
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    m = logits.max(-1)                                     # [B, Hl]
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(valid[:, None, :], p, 0.0)
+    l = p.sum(-1)
+    acc = jnp.einsum("bht,thd->bhd", p, v_sel)
+    return acc, m, l
+
+
+def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
+                           v_pages, lengths):
+    """q: [B, H, hd]; k_new/v_new: [B, Hkv, hd] (rope'd at position len-1);
+    k/v_pages: [n_pages, slots, Hkv, hd] global.  Returns (out, pages')."""
+    ctx = mesh_ctx.get_context()
+    b, h, hd = q.shape
+    n_pages, slots = k_pages.shape[0], k_pages.shape[1]
+    max_pages = n_pages // b
+
+    if ctx is None or ctx.n_kv_shards * ctx.tp == 1:
+        # single-device fallback: same math, no collectives
+        out, kp, vp = _single_shard(cfg, q, k_new, v_new, k_pages, v_pages,
+                                    lengths, max_pages)
+        return out, kp, vp
+
+    n_shards = ctx.n_kv_shards
+    assert n_pages % n_shards == 0, (n_pages, n_shards)
+    assert h % ctx.tp == 0, (h, ctx.tp)
+    hl = h // ctx.tp
+    kv_axes = ctx.kv_axes
+    tp_axis = ctx.tp_axis
+
+    def body(q_l, k_new_l, v_new_l, kp_l, vp_l, len_l):
+        sid = _flat_axis_index(kv_axes)
+        tp_idx = jax.lax.axis_index(tp_axis)
+        np_loc = kp_l.shape[0]
+        # WRITE: scatter the new K/V row into its owning shard's page
+        pidx = (len_l - 1) // slots
+        gpage = jnp.arange(b) * max_pages + pidx
+        rows = jnp.where(gpage % n_shards == sid, gpage // n_shards, np_loc)
+        off = (len_l - 1) % slots
+        kp_l = kp_l.at[rows, off].set(k_new_l.astype(kp_l.dtype), mode="drop")
+        vp_l = vp_l.at[rows, off].set(v_new_l.astype(vp_l.dtype), mode="drop")
+        # READ/compute: partial attention over owned pages
+        acc, m, l = _partial_paged_attention(
+            cfg, q_l, kp_l, vp_l, len_l, sid=sid, n_shards=n_shards,
+            max_pages=max_pages, head_start=tp_idx * hl)
+        # merge partials across the emulated-memory shards
+        m_glob = jax.lax.pmax(m, kv_axes)
+        w = jnp.exp(m - m_glob)
+        num = jax.lax.psum(acc * w[..., None], kv_axes)
+        den = jax.lax.psum(l * w, kv_axes)
+        out = (num / jnp.where(den == 0.0, 1.0, den)[..., None]).astype(q_l.dtype)
+        return out, kp_l, vp_l
+
+    kv_spec = P(kv_axes if len(kv_axes) > 1 else kv_axes[0])
+    fn = shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(None, tp_axis, None), P(), P(), kv_spec, kv_spec, P()),
+        out_specs=(P(None, tp_axis, None), kv_spec, kv_spec),
+        check_rep=False)
+    return fn(q, k_new, v_new, k_pages, v_pages, lengths)
+
+
+def _single_shard(cfg, q, k_new, v_new, k_pages, v_pages, lengths, max_pages):
+    b, h, hd = q.shape
+    slots = k_pages.shape[1]
+    pidx = (lengths - 1) // slots
+    rows = jnp.arange(b) * max_pages + pidx
+    off = (lengths - 1) % slots
+    k_pages = k_pages.at[rows, off].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[rows, off].set(v_new.astype(v_pages.dtype))
+    acc, m, l = _partial_paged_attention(
+        cfg, q, k_pages, v_pages, lengths, sid=jnp.int32(0), n_shards=1,
+        max_pages=max_pages, head_start=jnp.int32(0))
+    out = (acc / jnp.where(l == 0.0, 1.0, l)[..., None]).astype(q.dtype)
+    return out, k_pages, v_pages
+
+
+def paged_decode_block(cfg: ModelConfig, p_attn: dict, h: jax.Array,
+                       entry: dict, lengths: jax.Array):
+    """Attention sub-block for decode with the paged KV layout.
+
+    h: [B, 1, d] (already normed).  Returns (out [B, 1, d], new entry)."""
+    from repro.models import layers as L
+    b = h.shape[0]
+    positions = (lengths - 1)[:, None]
+    q, k_new, v_new = L._project_qkv(cfg, p_attn, h, positions)
+    out, kp, vp = paged_decode_attention(
+        cfg, q[:, :, 0], k_new[:, :, 0], v_new[:, :, 0],
+        entry["k_pages"], entry["v_pages"], lengths)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p_attn["wo"]
+    return out, {"k_pages": kp, "v_pages": vp}

@@ -1,0 +1,103 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+The engine owns a fixed-capacity decode batch (B slots).  Requests are
+admitted by the scheduler into free slots, prefilled one at a time (their KV
+written into the slot), then advanced together by the shared decode step --
+the standard continuous-batching pattern (vLLM/Orca) on top of this repo's
+model facade.  With ``kv_layout="paged"`` the cache is the emulated-memory
+page store and decode runs the sequence-parallel merge path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # [S] int32
+    max_new_tokens: int
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    slots: int = 4
+    max_len: int = 256
+    eos_id: int | None = None
+    greedy: bool = True
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, ecfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.ecfg = ecfg
+        self.cache = model.init_cache(ecfg.slots, ecfg.max_len)
+        self.lengths = jnp.zeros((ecfg.slots,), jnp.int32)
+        self.slot_req: list[Request | None] = [None] * ecfg.slots
+        self.budget = np.zeros(ecfg.slots, np.int64)
+        self._decode = jax.jit(
+            lambda p, t, c, l: model.decode_step(p, t, c, l))
+
+    # -- admission ----------------------------------------------------------
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def admit(self, req: Request, slot: int) -> None:
+        """Prefill a request into a slot (token-by-token writes share the
+        decode path, so this works for both KV layouts)."""
+        assert self.slot_req[slot] is None
+        self.slot_req[slot] = req
+        self.budget[slot] = req.max_new_tokens
+        self._reset_slot(slot)
+        lengths = np.array(self.lengths)
+        for t, tok in enumerate(req.prompt):
+            lengths[slot] = t + 1
+            self.lengths = jnp.asarray(lengths)
+            toks = np.zeros((self.ecfg.slots, 1), np.int32)
+            toks[slot, 0] = tok
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(toks), self.cache, self.lengths)
+        req._next = int(jnp.argmax(logits[slot, :self.model.cfg.vocab_size]))
+
+    def _reset_slot(self, slot: int) -> None:
+        lengths = np.array(self.lengths)
+        lengths[slot] = 0
+        self.lengths = jnp.asarray(lengths)
+
+    # -- decode -------------------------------------------------------------
+    def step(self) -> None:
+        """One decode step for every active slot."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        toks = np.zeros((self.ecfg.slots, 1), np.int32)
+        lengths = np.array(self.lengths)
+        for i in active:
+            req = self.slot_req[i]
+            toks[i, 0] = req._next
+            req.output.append(req._next)
+            lengths[i] += 1
+        self.lengths = jnp.asarray(lengths)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache, self.lengths)
+        for i in active:
+            req = self.slot_req[i]
+            req._next = int(jnp.argmax(
+                logits[i, :self.model.cfg.vocab_size]))
+            self.budget[i] -= 1
+            hit_eos = (self.ecfg.eos_id is not None
+                       and req.output and req.output[-1] == self.ecfg.eos_id)
+            if self.budget[i] <= 0 or hit_eos or \
+                    int(lengths[i]) >= self.ecfg.max_len - 1:
+                req.done = True
+                self.slot_req[i] = None

@@ -1,0 +1,41 @@
+"""Request scheduler: FIFO admission with continuous batching."""
+from __future__ import annotations
+
+import collections
+from typing import Iterable
+
+from repro.serve.engine import Request, ServeEngine
+
+
+class Scheduler:
+    def __init__(self, engine: ServeEngine):
+        self.engine = engine
+        self.queue: collections.deque[Request] = collections.deque()
+        self.completed: list[Request] = []
+
+    def submit(self, reqs: Iterable[Request]) -> None:
+        self.queue.extend(reqs)
+
+    def _admit_waiting(self) -> None:
+        for slot in self.engine.free_slots():
+            if not self.queue:
+                break
+            self.engine.admit(self.queue.popleft(), slot)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Drive until all submitted requests complete."""
+        inflight: list[Request] = []
+        steps = 0
+        while (self.queue or any(r is not None
+                                 for r in self.engine.slot_req)):
+            self._admit_waiting()
+            before = [r for r in self.engine.slot_req if r is not None]
+            inflight = list({id(r): r for r in inflight + before}.values())
+            self.engine.step()
+            for r in inflight:
+                if r.done and r not in self.completed:
+                    self.completed.append(r)
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("scheduler exceeded max_steps")
+        return self.completed

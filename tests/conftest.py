@@ -1,0 +1,25 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here -- tests see the real single
+device; multi-device tests spawn subprocesses or use their own flag module
+(tests/test_distributed.py runs under a forked interpreter)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def tiny_dense_cfg(**kw):
+    from repro.models import ModelConfig
+    base = dict(name="tiny", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                vocab_size=100, param_dtype="float32",
+                compute_dtype="float32", attn_chunk_q=16, attn_chunk_k=16)
+    base.update(kw)
+    return ModelConfig(**base)

@@ -1,0 +1,118 @@
+"""EMem invariants: addressing, reference semantics, property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import emem
+
+
+def make_spec(n_slots=512, width=4, page_slots=16, n_shards=4):
+    return emem.EMemSpec(n_slots=n_slots, width=width, page_slots=page_slots,
+                         n_shards=n_shards)
+
+
+# -- addressing ----------------------------------------------------------------
+def test_address_decomposition():
+    spec = make_spec()
+    addrs = jnp.arange(spec.n_slots)
+    owners = spec.owner_of(addrs)
+    local = spec.local_slot_of(addrs)
+    # every (owner, local) pair is unique == bijective addressing
+    combined = np.asarray(owners) * spec.slots_per_shard + np.asarray(local)
+    assert len(np.unique(combined)) == spec.n_slots
+    assert int(owners.max()) == spec.n_shards - 1
+    assert int(local.max()) == spec.slots_per_shard - 1
+
+
+def test_page_cyclic_distribution():
+    spec = make_spec()
+    pages = jnp.arange(spec.n_pages)
+    owners = spec.owner_of(pages * spec.page_slots)
+    counts = np.bincount(np.asarray(owners), minlength=spec.n_shards)
+    assert (counts == spec.pages_per_shard).all()
+
+
+def test_layout_roundtrip():
+    spec = make_spec()
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.normal(size=spec.global_shape()).astype(np.float32))
+    back = emem.from_logical(spec, emem.to_logical(spec, data))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(data))
+
+
+# -- reference semantics --------------------------------------------------------
+def test_read_after_write_ref():
+    spec = make_spec()
+    rng = np.random.default_rng(1)
+    addrs = jnp.asarray(rng.permutation(spec.n_slots)[:64].astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(64, spec.width)).astype(np.float32))
+    mem = emem.write_ref(spec, emem.create(spec), addrs, vals)
+    np.testing.assert_allclose(emem.read_ref(spec, mem, addrs), vals)
+
+
+def test_untouched_slots_remain_zero():
+    spec = make_spec()
+    addrs = jnp.asarray([0, 17, 33], jnp.int32)
+    vals = jnp.ones((3, spec.width))
+    mem = emem.write_ref(spec, emem.create(spec), addrs, vals)
+    others = jnp.asarray([1, 2, 100], jnp.int32)
+    assert float(jnp.abs(emem.read_ref(spec, mem, others)).max()) == 0.0
+
+
+# -- single-shard distributed bodies (n_shards=1 fast path) ----------------------
+def test_shard_body_single_matches_ref():
+    spec = emem.EMemSpec(n_slots=256, width=3, page_slots=8, n_shards=1)
+    rng = np.random.default_rng(2)
+    addrs = jnp.asarray(rng.integers(0, 256, 40).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(40, 3)).astype(np.float32))
+    local = emem.create(spec)
+    local = emem.write_shard(spec, ("x",), local, addrs, vals, capacity=40)
+    out = emem.read_shard(spec, ("x",), local, addrs, capacity=40)
+    ref = emem.read_ref(spec, emem.write_ref(spec, emem.create(spec),
+                                             addrs, vals), addrs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+
+
+# -- property tests ---------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 511), min_size=1, max_size=40, unique=True),
+       st.integers(0, 2**31 - 1))
+def test_property_read_after_write(addr_list, seed):
+    spec = make_spec()
+    rng = np.random.default_rng(seed)
+    addrs = jnp.asarray(np.array(addr_list, np.int32))
+    vals = jnp.asarray(
+        rng.normal(size=(len(addr_list), spec.width)).astype(np.float32))
+    mem = emem.write_ref(spec, emem.create(spec), addrs, vals)
+    np.testing.assert_allclose(emem.read_ref(spec, mem, addrs), vals,
+                               rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.permutations(list(range(32))))
+def test_property_read_permutation_invariant(perm):
+    spec = make_spec()
+    rng = np.random.default_rng(3)
+    base = jnp.asarray(rng.integers(0, 512, 32).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(512, spec.width)).astype(np.float32))
+    mem = emem.write_ref(spec, emem.create(spec),
+                         jnp.arange(512, dtype=jnp.int32), vals)
+    p = np.array(perm)
+    out = emem.read_ref(spec, mem, base)
+    out_p = emem.read_ref(spec, mem, base[p])
+    np.testing.assert_allclose(np.asarray(out)[p], np.asarray(out_p))
+
+
+def test_dispatch_stats_no_overflow_with_full_capacity():
+    spec = make_spec()
+    s = emem.dispatch_stats(spec, 64, capacity_factor=64.0)
+    assert s["p_queue_overflow"] == 0.0
+    s2 = emem.dispatch_stats(spec, 64, capacity_factor=1.0)
+    assert 0.0 < s2["p_queue_overflow"] < 1.0
+
+
+def test_capacity_bounds():
+    spec = make_spec()
+    assert emem.capacity_for(spec, 64, 2.0) == 32
+    assert emem.capacity_for(spec, 64, 1e9) == 64   # clamped to R

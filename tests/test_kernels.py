@@ -1,0 +1,168 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles.
+
+All Pallas kernels run in interpret mode on CPU (the TPU BlockSpec tiling is
+exercised structurally; numerics match the oracle)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import kernel as dec_k, ref as dec_ref
+from repro.kernels.emem_gather import kernel as eg_k, ref as eg_ref
+from repro.kernels.flash_attention import kernel as fa_k, ref as fa_ref
+from repro.kernels.mamba2_ssd import kernel as ssd_k, ref as ssd_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+# -- emem_gather ---------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 8, 16), (8, 16, 4), (2, 32, 128)])
+def test_gather_slots_sweep(rng, shape, dtype):
+    n_pages, page_slots, width = shape
+    pages = jnp.asarray(rng.normal(size=shape), dtype)
+    slots = jnp.asarray(np.concatenate([
+        rng.integers(0, n_pages * page_slots, 17), [-1]]).astype(np.int32))
+    out = eg_k.gather_slots(pages, slots, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(eg_ref.gather_slots(pages, slots), np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_pages_sweep(rng, dtype):
+    pages = jnp.asarray(rng.normal(size=(6, 8, 32)), dtype)
+    ids = jnp.asarray(np.array([5, -1, 0, 3], np.int32))
+    out = eg_k.gather_pages(pages, ids, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(eg_ref.gather_pages(pages, ids), np.float32), **_tol(dtype))
+
+
+def test_scatter_then_gather_roundtrip(rng):
+    pages = jnp.zeros((4, 8, 8), jnp.float32)
+    slots = jnp.asarray(rng.permutation(32)[:10].astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(10, 8)).astype(np.float32))
+    pages = eg_ref.scatter_slots(pages, slots, vals)
+    np.testing.assert_allclose(eg_ref.gather_slots(pages, slots), vals)
+
+
+# -- flash attention -------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 16), (False, 8)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_attention_sweep(rng, dtype, causal, window, hq, hkv):
+    B, S, D = 2, 32, 16
+    q = jnp.asarray(rng.normal(size=(B, hq, S, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, hkv, S, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, hkv, S, D)), dtype)
+    out = fa_k.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=8, block_k=8, interpret=True)
+    ref = fa_ref.mha(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_tail_queries(rng):
+    """Sq < Skv: queries at the sequence tail (prefill continuation)."""
+    B, H, S, D = 1, 2, 32, 8
+    q = jnp.asarray(rng.normal(size=(B, H, 8, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, H, S, D)).astype(np.float32))
+    out = fa_k.flash_attention(q, k, v, causal=True, block_q=8, block_k=8,
+                               interpret=True)
+    ref = fa_ref.mha(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+# -- decode attention ------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 8])
+def test_flash_decode_sweep(rng, dtype, window):
+    B, Hkv, G, S, D = 3, 2, 4, 32, 16
+    q = jnp.asarray(rng.normal(size=(B, Hkv, G, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), dtype)
+    lengths = jnp.asarray([32, 9, 17], jnp.int32)
+    out, m, l = dec_k.flash_decode(q, k, v, lengths, window=window,
+                                   block_k=8, interpret=True)
+    ref = dec_ref.decode_attention(
+        q.reshape(B, Hkv * G, D), k, v, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(out.reshape(B, Hkv * G, D), np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_partial_merge_equals_full(rng):
+    from repro.kernels.decode_attention import ops
+    B, Hq, Hkv, S, D, P = 2, 4, 2, 64, 8, 4
+    q = jnp.asarray(rng.normal(size=(B, Hq, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    lengths = jnp.asarray([64, 40], jnp.int32)
+    sp = S // P
+    parts = []
+    for p in range(P):
+        lp = jnp.clip(lengths - p * sp, 0, sp)
+        parts.append(ops.decode_attention_partial(
+            q, k[:, :, p * sp:(p + 1) * sp], v[:, :, p * sp:(p + 1) * sp],
+            lp, use_pallas=True, interpret=True, block_k=8))
+    merged = ops.merge_partials(jnp.stack([p[0] for p in parts]),
+                                jnp.stack([p[1] for p in parts]),
+                                jnp.stack([p[2] for p in parts]))
+    full = dec_ref.decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(merged, full, rtol=1e-5, atol=1e-5)
+
+
+# -- mamba2 SSD -------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+@pytest.mark.parametrize("groups", [1, 2])
+def test_ssd_sweep(rng, dtype, chunk, groups):
+    Bt, S, H, P, N = 2, 64, 4, 8, 16
+    x = jnp.asarray(rng.normal(size=(Bt, S, H, P)), dtype)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(Bt, S, H)).astype(np.float32))
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(H,)).astype(np.float32))
+    B = jnp.asarray(rng.normal(size=(Bt, S, groups, N)), dtype)
+    C = jnp.asarray(rng.normal(size=(Bt, S, groups, N)), dtype)
+    D = jnp.asarray(rng.normal(size=(H,)).astype(np.float32))
+    y = ssd_k.ssd(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    y_ref, _ = ssd_ref.ssd_scan(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_ssd_chunked_matches_sequential(rng):
+    Bt, S, H, P, N = 1, 48, 2, 4, 8
+    x = jnp.asarray(rng.normal(size=(Bt, S, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, size=(Bt, S, H)).astype(np.float32))
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(H,)).astype(np.float32))
+    B = jnp.asarray(rng.normal(size=(Bt, S, 1, N)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(Bt, S, 1, N)).astype(np.float32))
+    D = jnp.asarray(rng.normal(size=(H,)).astype(np.float32))
+    y1, s1 = ssd_ref.ssd_scan(x, dt, A, B, C, D)
+    y2, s2 = ssd_ref.ssd_chunked(x, dt, A, B, C, D, chunk=12)
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_decode_chain_matches_scan(rng):
+    Bt, S, H, P, N = 2, 8, 2, 4, 8
+    x = jnp.asarray(rng.normal(size=(Bt, S, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, size=(Bt, S, H)).astype(np.float32))
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(H,)).astype(np.float32))
+    B = jnp.asarray(rng.normal(size=(Bt, S, 1, N)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(Bt, S, 1, N)).astype(np.float32))
+    D = jnp.asarray(rng.normal(size=(H,)).astype(np.float32))
+    y_ref, _ = ssd_ref.ssd_scan(x, dt, A, B, C, D)
+    state = jnp.zeros((Bt, H, N, P))
+    ys = []
+    for t in range(S):
+        y1, state = ssd_ref.ssd_decode_step(x[:, t], dt[:, t], A, B[:, t],
+                                            C[:, t], D, state)
+        ys.append(y1)
+    np.testing.assert_allclose(jnp.stack(ys, 1), y_ref, rtol=1e-5, atol=1e-5)

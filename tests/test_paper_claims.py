@@ -1,0 +1,162 @@
+"""Validation of the paper's headline claims against our analytic models.
+
+Every row of DESIGN.md §5 is asserted here; these are the reproduction's
+acceptance tests (EXPERIMENTS.md §Validation reports the same numbers).
+"""
+import pytest
+
+from repro.core import dram, emulation, latency, vlsi
+
+
+# -- §6.1: DDR3 baseline ------------------------------------------------------
+def test_ddr3_single_rank_35ns():
+    assert dram.paper_baseline(1) == pytest.approx(35.0, abs=2.0)
+
+
+def test_ddr3_multi_rank_36ns():
+    assert dram.paper_baseline(4) == pytest.approx(36.0, abs=2.0)
+    assert dram.paper_baseline(16) > dram.paper_baseline(1)
+
+
+# -- §7.1: absolute latency (Fig. 9) -----------------------------------------
+@pytest.mark.parametrize("system_tiles", [1024, 4096])
+def test_clos_latency_within_2_to_5x_of_ddr3(system_tiles):
+    base = dram.paper_baseline(1)
+    sweep = latency.fig9_sweep(system_tiles)
+    for n, cycles in zip(sweep["sizes"], sweep["clos"]):
+        if n >= 512:   # the "large emulation" regime of the claim
+            assert 2.0 <= cycles / base <= 5.0, (n, cycles / base)
+
+
+def test_clos_latency_3_to_4x_at_full_machine():
+    sweep = latency.fig9_sweep(4096)
+    ratio = sweep["clos"][-1] / dram.paper_baseline(1)
+    assert 2.5 <= ratio <= 4.0
+
+
+def test_mesh_30_to_40pct_worse_at_large_multichip():
+    sweep = latency.fig9_sweep(4096)
+    ratio = sweep["mesh"][-1] / sweep["clos"][-1]
+    assert 1.25 <= ratio <= 1.55, ratio
+
+
+def test_latency_grows_with_emulation_size():
+    sweep = latency.fig9_sweep(4096)
+    assert sweep["clos"] == sorted(sweep["clos"])
+
+
+def test_extra_stage_visible_beyond_256_tiles():
+    sweep = latency.fig9_sweep(4096)
+    sizes = sweep["sizes"]
+    i256, i512 = sizes.index(256), sizes.index(512)
+    jump = sweep["clos"][i512] - sweep["clos"][i256]
+    prev = sweep["clos"][i256] - sweep["clos"][sizes.index(128)]
+    assert jump > 3 * max(prev, 1.0)   # chip-boundary latency step
+
+
+# -- §7.2: benchmark slowdown (Fig. 10) ---------------------------------------
+@pytest.mark.parametrize("system_tiles", [1024, 4096])
+@pytest.mark.parametrize("mix", [emulation.DHRYSTONE, emulation.COMPILER])
+def test_slowdown_2_to_3x_up_to_4096_tiles(system_tiles, mix):
+    s = emulation.slowdown(mix, "clos", system_tiles, system_tiles)
+    assert 1.8 <= s <= 3.0, s
+
+
+def test_speedup_up_to_16_tiles():
+    for mix in (emulation.DHRYSTONE, emulation.COMPILER):
+        assert emulation.slowdown(mix, "clos", 1024, 16) < 1.0
+        assert emulation.slowdown(mix, "mesh", 1024, 16) < 1.0
+
+
+def test_dhrystone_less_efficient_than_compiler():
+    d = emulation.slowdown(emulation.DHRYSTONE, "clos", 4096, 4096)
+    c = emulation.slowdown(emulation.COMPILER, "clos", 4096, 4096)
+    assert d > c
+
+
+def test_mesh_deteriorates_beyond_128_tiles():
+    sweep = emulation.fig10_sweep(4096)
+    sizes = sweep["sizes"]
+    i = sizes.index(4096)
+    assert sweep["mesh/dhrystone"][i] > 1.25 * sweep["clos/dhrystone"][i]
+    # similar performance in the small on-chip regime
+    j = sizes.index(64)
+    assert abs(sweep["mesh/dhrystone"][j] - sweep["clos/dhrystone"][j]) < 0.5
+
+
+# -- Fig. 11: instruction-mix sweep -------------------------------------------
+def test_mix_sweep_monotone_and_converging():
+    out = emulation.fig11_sweep(1024)
+    clos = out["clos"]
+    assert clos[0] == 1.0
+    assert all(b >= a - 1e-9 for a, b in zip(clos, clos[1:]))
+    # converges toward the latency ratio (paper: worst case 1.5-2.5 for the
+    # 1,024-tile system)
+    assert 1.5 <= clos[-1] <= 2.8
+
+
+# -- §7.3: binary size ---------------------------------------------------------
+def test_load_store_expansion_constants():
+    assert emulation.LOAD_EXTRA_INSTRS == 2
+    assert emulation.STORE_EXTRA_INSTRS == 3
+
+
+def test_compiler_binary_8pct():
+    assert emulation.COMPILER_BINARY.size_overhead() == pytest.approx(
+        0.08, abs=0.005)
+
+
+# -- §5.1: VLSI anchors ---------------------------------------------------------
+def test_clos_chip_area_anchor():
+    c = vlsi.clos_chip(256, 128)
+    assert c.total_mm2 == pytest.approx(132.9, rel=0.15)
+    assert c.io_mm2 == pytest.approx(44.6, rel=0.15)
+
+
+def test_mesh_chip_area_anchor():
+    m = vlsi.mesh_chip(256, 128)
+    assert m.total_mm2 == pytest.approx(87.9, rel=0.15)
+
+
+def test_clos_13_to_43pct_larger_than_mesh():
+    c = vlsi.clos_chip(256, 128)
+    m = vlsi.mesh_chip(256, 128)
+    assert 1.10 <= c.total_mm2 / m.total_mm2 <= 1.50
+
+
+def test_interconnect_fractions():
+    c = vlsi.clos_chip(256, 128)
+    assert 0.04 <= c.interconnect_frac <= 0.09      # paper: 5-8%
+    m = vlsi.mesh_chip(256, 128)
+    assert 0.005 <= m.interconnect_frac <= 0.04     # paper: 2-3%
+
+
+def test_mesh_switch_wires_1_7_to_3_5mm():
+    lo = vlsi.mesh_chip(256, 64).l1_wire_mm
+    hi = vlsi.mesh_chip(256, 512).l1_wire_mm
+    assert 1.5 <= lo <= 2.2
+    assert 3.2 <= hi <= 4.0
+
+
+def test_clos_onchip_wires_single_or_two_cycle():
+    for kb in (64, 128, 256):
+        c = vlsi.clos_chip(256, kb)
+        assert c.t_tile_cycles == 1
+        assert c.l1_cycles in (1, 2)
+        assert c.l1_wire_mm < 11.2
+
+
+def test_interposer_channel_fraction_and_delay():
+    big = vlsi.interposer("clos", 16, 512, 128)
+    assert 0.30 <= big.channel_frac <= 0.55         # paper: up to ~42%
+    econ = vlsi.interposer("clos", 16, 256, 128)
+    assert 0.8 <= econ.min_wire_ns <= 3.0
+    assert 4.0 <= econ.max_wire_ns <= 10.0          # paper: 1-8 ns
+    mesh_ip = vlsi.interposer("mesh", 16, 256, 128)
+    assert mesh_ip.min_wire_ns < 0.2                # paper: 0.09 ns constant
+
+
+def test_economical_chip_range():
+    c = vlsi.clos_chip(256, 128)
+    m = vlsi.mesh_chip(256, 128)
+    assert c.economical and m.economical
