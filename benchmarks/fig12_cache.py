@@ -1,0 +1,23 @@
+"""Cache sweep: slowdown vs hot-page cache size under the DHRYSTONE mix.
+
+The emem_vm extension of the paper's Fig. 10: each client tile keeps a
+hot-page cache in local SRAM (repro.emem_vm.cache); hits are 1-cycle local
+accesses, misses pay the full §2.1 communication sequence.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, timeit
+from repro.core import emulation
+
+
+def rows() -> list[dict]:
+    out = []
+    for system in (1024, 4096):
+        us = timeit(emulation.fig_cache_sweep, system)
+        sweep = emulation.fig_cache_sweep(system)
+        for i, c in enumerate(sweep["cache_kb"]):
+            out.append(row(
+                f"fig12/{system}sys/{c}kb", us if i == 0 else 0.0,
+                f"hit={sweep['hit_rate'][i]:.3f} "
+                f"clos={sweep['clos'][i]:.2f} mesh={sweep['mesh'][i]:.2f}"))
+    return out

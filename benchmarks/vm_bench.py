@@ -1,0 +1,111 @@
+"""EMemVM microbenchmark: virtual read/write throughput, cache hit rate,
+and pooled-vs-fixed serving slot utilization.
+
+Also consolidates the results into ``BENCH_vm.json`` at the repo root so the
+perf trajectory of the virtual-memory subsystem is tracked PR over PR.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import emem
+from repro.emem_vm import EMemVM, VMConfig
+from repro.emem_vm import vm as vm_mod
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_vm.json")
+
+
+def _throughput_rows(record: dict) -> list[dict]:
+    out = []
+    rng = np.random.default_rng(0)
+    n_slots, width, page_slots, n_requests = 1 << 14, 64, 128, 4096
+    spec = emem.EMemSpec(n_slots=n_slots, width=width, page_slots=page_slots,
+                         n_shards=1)
+    for sets in (0, 16):
+        cfg = VMConfig(spec=spec, n_vpages=spec.n_pages - 1, cache_sets=sets)
+        vm = EMemVM(cfg)
+        vm.map_range(0, cfg.n_vpages)
+        addrs = jnp.asarray(rng.integers(
+            0, cfg.n_vpages * page_slots, n_requests).astype(np.int32))
+        vals = jnp.asarray(
+            rng.normal(size=(n_requests, width)).astype(np.float32))
+        # the pure steps jit end-to-end (static shapes by construction)
+        read = jax.jit(functools.partial(vm_mod.read_step, cfg, None, ()))
+        write = jax.jit(functools.partial(vm_mod.write_step, cfg, None, ()))
+        entries = vm.page_table.entries
+
+        def vread():
+            out, vm.data, vm.cache = read(entries, vm.data, vm.cache, addrs)
+            return out.block_until_ready()
+
+        def vwrite():
+            data, cache = write(entries, vm.data, vm.cache, addrs, vals)
+            vm.data, vm.cache = data, cache
+            return data.block_until_ready()
+
+        us_r, us_w = timeit(vread), timeit(vwrite)
+        if sets:
+            # steady-state hit rate: reset counters, then one warm pass
+            vm.cache["hits"] = jnp.zeros_like(vm.cache["hits"])
+            vm.cache["misses"] = jnp.zeros_like(vm.cache["misses"])
+            vread()
+        hit_rate = vm.counters()["hit_rate"]
+        gb = n_requests * width * 4 / 1e9
+        tag = f"cache{sets}" if sets else "nocache"
+        out.append(row(f"vm/vread/{tag}", us_r,
+                       f"{gb / (us_r / 1e6):.2f} GB/s effective"))
+        out.append(row(f"vm/vwrite/{tag}", us_w,
+                       f"{gb / (us_w / 1e6):.2f} GB/s effective"))
+        record[f"vread_us_{tag}"] = round(us_r, 1)
+        record[f"vwrite_us_{tag}"] = round(us_w, 1)
+        if sets:
+            record["cache_hit_rate"] = round(hit_rate, 4)
+            out.append(row(f"vm/hit_rate/{tag}", 0.0, f"{hit_rate:.3f}"))
+    return out
+
+
+def _utilization_rows(record: dict) -> list[dict]:
+    """Concurrent requests admissible under the same KV byte budget.
+
+    Fixed layout: every slot reserves ceil(max_len / page_slots) pages, so
+    concurrency == pool_pages / max_pages regardless of sequence length.
+    Pooled layout: each request reserves only its own worst case.  Pure
+    admission arithmetic (mirrors ServeEngine.can_admit) -- no model runs.
+    """
+    out = []
+    max_len, page_slots = 2048, 256
+    max_pages = max_len // page_slots
+    pool_pages = 8 * max_pages                   # fixed layout: 8 slots
+    for seq_len in (128, 256, 512, 1024, 2048):
+        need = max(1, -(-seq_len // page_slots))
+        fixed = pool_pages // max_pages
+        pooled = pool_pages // need
+        util_fixed = fixed * need / pool_pages
+        util_pooled = pooled * need / pool_pages
+        out.append(row(
+            f"vm/util/seq{seq_len}", 0.0,
+            f"fixed={fixed}req({util_fixed:.0%}) "
+            f"pooled={pooled}req({util_pooled:.0%})"))
+        record.setdefault("utilization", []).append({
+            "seq_len": seq_len, "fixed_concurrent": fixed,
+            "pooled_concurrent": pooled,
+            "fixed_page_utilization": round(util_fixed, 3),
+            "pooled_page_utilization": round(util_pooled, 3)})
+    return out
+
+
+def rows() -> list[dict]:
+    record: dict = {}
+    out = _throughput_rows(record) + _utilization_rows(record)
+    with open(_JSON_PATH, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    out.append(row("vm/json", 0.0, "wrote BENCH_vm.json"))
+    return out

@@ -1,7 +1,9 @@
 """Serving example: continuous batching over the paged (emulated-memory) KV
-cache -- the paper's technique as serving infrastructure.
+cache -- the paper's technique as serving infrastructure.  ``--layout pooled``
+uses the emem_vm frame pool: KV pages allocated on demand and freed at
+completion, so the 6 requests share a pool sized for 3 fixed slots.
 
-Run: PYTHONPATH=src python examples/serve_lm.py [--paged]
+Run: PYTHONPATH=src python examples/serve_lm.py [--layout batch|paged|pooled]
 """
 import argparse
 import os
@@ -20,19 +22,22 @@ from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--paged", action="store_true", default=True)
+    ap.add_argument("--layout", choices=("batch", "paged", "pooled"),
+                    default="paged")
     ap.add_argument("--requests", type=int, default=6)
     args = ap.parse_args()
 
+    # pooled: 6 decode slots share the KV pool that "paged" reserves for 3
+    pool = 3 * (96 // 16) if args.layout == "pooled" else None
+    slots = 6 if args.layout == "pooled" else 3
     cfg = ModelConfig(name="serve-example", family="dense", n_layers=2,
                       d_model=128, n_heads=8, n_kv_heads=2, head_dim=16,
-                      d_ff=256, vocab_size=256,
-                      kv_layout="paged" if args.paged else "batch",
-                      kv_page_slots=16, param_dtype="float32",
-                      compute_dtype="float32")
+                      d_ff=256, vocab_size=256, kv_layout=args.layout,
+                      kv_page_slots=16, kv_pool_pages=pool,
+                      param_dtype="float32", compute_dtype="float32")
     model = Model(cfg)
     params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, EngineConfig(slots=3, max_len=96))
+    engine = ServeEngine(model, params, EngineConfig(slots=slots, max_len=96))
     sched = Scheduler(engine)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
@@ -44,7 +49,7 @@ def main():
     dt = time.monotonic() - t0
     n_new = sum(len(r.output) for r in done)
     print(f"kv_layout={cfg.kv_layout}: {len(done)} requests, {n_new} tokens "
-          f"in {dt:.1f}s ({n_new / dt:.1f} tok/s)")
+          f"in {dt:.1f}s ({n_new / dt:.1f} tok/s) {engine.pool_stats()}")
     for r in done[:3]:
         print(f"  req {r.uid}: {list(r.prompt[:4])}... -> {r.output}")
 

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Local mirror of the CI tier-1 job: run from the repo root.
+#   scripts/devcheck.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=8"
+
+exec python -m pytest -x -q "$@"

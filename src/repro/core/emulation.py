@@ -19,6 +19,7 @@ next access issues -- the paper's sequential-consistency measurement loop).
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from repro.core import dram as dram_mod
 from repro.core import latency as lat_mod
@@ -53,6 +54,27 @@ DHRYSTONE = InstructionMix("dhrystone", non_mem=0.60, local=0.20, global_=0.20)
 COMPILER = InstructionMix("compiler", non_mem=0.70, local=0.20, global_=0.10)
 
 
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Hot-page cache in the client tile's local SRAM (the emem_vm cache).
+
+    A global access that hits the cache is an ordinary 1-cycle local SRAM
+    access -- no §2.1 communication sequence is issued.  The hit rate follows
+    a hyperbolic working-set curve ``h = C / (C + C_half)``: ``C_half`` is
+    the cache size that captures half the accesses (the hot-set half-size).
+    It is a fitted stand-in for a measured reuse profile: monotone in the
+    capacity, 0 at size 0, asymptotic to 1, matching the shape of the
+    executable cache's measured counters (``EMemVM.counters``).
+    """
+    capacity_kb: float
+    hot_set_half_kb: float = 64.0
+
+    def hit_rate(self) -> float:
+        if self.capacity_kb <= 0.0:
+            return 0.0
+        return self.capacity_kb / (self.capacity_kb + self.hot_set_half_kb)
+
+
 def synthetic_mix(global_frac: float, local_frac: float = 0.20) -> InstructionMix:
     """Synthetic sequences with a swept global fraction (Fig. 11)."""
     return InstructionMix(f"synthetic-g{global_frac:.2f}",
@@ -74,19 +96,30 @@ class SequentialMachine:
 
 
 class EmulationMachine:
-    """The parallel machine running the same program with an emulated memory."""
+    """The parallel machine running the same program with an emulated memory.
 
-    def __init__(self, sys: lat_mod.SystemConfig, emulation_tiles: int):
+    With a :class:`CacheConfig` the access model is cache-aware: a hit is a
+    1-cycle local SRAM access, a miss pays the full communication sequence
+    (issue overhead + network round trip), weighted by the hit rate.
+    """
+
+    def __init__(self, sys: lat_mod.SystemConfig, emulation_tiles: int,
+                 cache: CacheConfig | None = None):
         self.sys = sys
         self.model = lat_mod.LatencyModel(sys)
         self.emulation_tiles = min(emulation_tiles, sys.n_tiles)
+        self.cache = cache
 
     def global_access_cycles(self, mix: InstructionMix) -> float:
         rt = self.model.mean_access_latency(self.emulation_tiles)
         issue = (1.0
                  + mix.load_frac * LOAD_EXTRA_INSTRS
                  + mix.store_frac * STORE_EXTRA_INSTRS)
-        return issue + rt
+        miss_cycles = issue + rt
+        if self.cache is None:
+            return miss_cycles
+        h = self.cache.hit_rate()
+        return h * 1.0 + (1.0 - h) * miss_cycles
 
     def cycles_per_instruction(self, mix: InstructionMix) -> float:
         return ((mix.non_mem + mix.local) * 1.0
@@ -95,7 +128,8 @@ class EmulationMachine:
 
 def slowdown(mix: InstructionMix, network: str, system_tiles: int,
              emulation_tiles: int, mem_kb: int = 256,
-             dram_capacity_gb: int | None = None) -> float:
+             dram_capacity_gb: int | None = None,
+             cache: CacheConfig | None = None) -> float:
     """Relative slowdown of the emulation vs the sequential machine (Fig. 10).
 
     The DRAM baseline capacity defaults to the capacity of the emulated
@@ -107,7 +141,7 @@ def slowdown(mix: InstructionMix, network: str, system_tiles: int,
     seq = SequentialMachine(dram=dram_mod.DRAMSystem(capacity_gb=dram_capacity_gb))
     par = EmulationMachine(
         lat_mod.SystemConfig(network=network, n_tiles=system_tiles, mem_kb=mem_kb),
-        emulation_tiles)
+        emulation_tiles, cache=cache)
     return par.cycles_per_instruction(mix) / seq.cycles_per_instruction(mix)
 
 
@@ -140,6 +174,26 @@ def fig11_sweep(system_tiles: int, emulation_tiles: int | None = None,
             vals.append(slowdown(synthetic_mix(g), net, system_tiles,
                                  emulation_tiles, mem_kb))
         out[net] = vals
+    return out
+
+
+def fig_cache_sweep(system_tiles: int, emulation_tiles: int | None = None,
+                    mem_kb: int = 256, mix: InstructionMix = DHRYSTONE,
+                    cache_sizes_kb: Sequence[float] = (0, 4, 8, 16, 32, 64,
+                                                      128, 256, 512),
+                    networks: tuple[str, ...] = ("clos", "mesh")) -> dict:
+    """Slowdown vs hot-page cache size (the emem_vm extension of Fig. 10).
+
+    Returns {"cache_kb": [...], "hit_rate": [...], "<net>": [slowdowns]};
+    slowdown is monotone non-increasing in cache size by construction.
+    """
+    emulation_tiles = emulation_tiles or system_tiles
+    caches = [CacheConfig(c) for c in cache_sizes_kb]
+    out: dict = {"cache_kb": list(cache_sizes_kb),
+                 "hit_rate": [c.hit_rate() for c in caches]}
+    for net in networks:
+        out[net] = [slowdown(mix, net, system_tiles, emulation_tiles, mem_kb,
+                             cache=c) for c in caches]
     return out
 
 

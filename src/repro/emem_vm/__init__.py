@@ -1,0 +1,23 @@
+"""EMemVM -- a virtual-memory subsystem over the emulated memory.
+
+The paper (§2.1) emulates one large sequential memory with many small ones;
+:mod:`repro.core.emem` is that emulation with *static* addressing.  This
+package adds the indirection that turns the emulation into a memory *system*:
+
+  * :mod:`repro.emem_vm.page_table`  -- batched logical->physical translation
+    (valid + R/W protection bits), itself laid out as a small EMem-style
+    paged array so it can be sharded like the memory it describes;
+  * :mod:`repro.emem_vm.allocator`   -- a free-list frame allocator over the
+    physical page pool (alloc/free/bulk, occupancy + fragmentation stats);
+  * :mod:`repro.emem_vm.cache`       -- a fixed-capacity per-requester
+    hot-page cache (direct-mapped, write-back with dirty bits), static
+    shapes throughout so every operation jits;
+  * :mod:`repro.emem_vm.vm`          -- the :class:`EMemVM` facade exposing
+    ``vread``/``vwrite`` that translate through the page table, consult the
+    cache, and fall through to ``emem.read``/``emem.write`` on miss.
+"""
+from repro.emem_vm.allocator import FrameAllocator  # noqa: F401
+from repro.emem_vm.cache import CacheSpec, HotPageCache  # noqa: F401
+from repro.emem_vm.page_table import PROT_NONE, PROT_R, PROT_RW, PROT_W  # noqa: F401
+from repro.emem_vm.page_table import PageTable  # noqa: F401
+from repro.emem_vm.vm import EMemVM, VMConfig  # noqa: F401

@@ -1,0 +1,91 @@
+"""Free-list frame allocator over the EMem physical page pool.
+
+Allocation is a control-plane operation (it happens at request admission /
+completion on the host, never inside a jitted step), so the allocator is
+plain Python over numpy -- the data plane only ever sees the frame indices
+it hands out.  LIFO free-list: recently freed frames are reused first, which
+keeps the hot-page cache warm across free+realloc churn.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class OutOfFrames(RuntimeError):
+    """The pool has no free frame left."""
+
+
+@dataclasses.dataclass
+class FrameAllocator:
+    """LIFO free-list over physical frames ``[0, n_frames)``."""
+    n_frames: int
+
+    def __post_init__(self):
+        if self.n_frames <= 0:
+            raise ValueError("n_frames must be positive")
+        self._free: list[int] = list(range(self.n_frames - 1, -1, -1))
+        self._allocated = np.zeros(self.n_frames, bool)
+
+    # -- alloc / free ---------------------------------------------------------
+    def alloc(self) -> int:
+        if not self._free:
+            raise OutOfFrames(f"all {self.n_frames} frames allocated")
+        f = self._free.pop()
+        self._allocated[f] = True
+        return f
+
+    def bulk_alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise OutOfFrames(
+                f"requested {n} frames, only {len(self._free)} free")
+        return [self.alloc() for _ in range(n)]
+
+    def free(self, frame: int) -> None:
+        if not (0 <= frame < self.n_frames):
+            raise ValueError(f"frame {frame} out of range")
+        if not self._allocated[frame]:
+            raise ValueError(f"double free of frame {frame}")
+        self._allocated[frame] = False
+        self._free.append(frame)
+
+    def bulk_free(self, frames) -> None:
+        for f in frames:
+            self.free(int(f))
+
+    # -- stats ----------------------------------------------------------------
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def used_count(self) -> int:
+        return self.n_frames - len(self._free)
+
+    def occupancy(self) -> float:
+        return self.used_count() / self.n_frames
+
+    def fragmentation(self) -> float:
+        """1 - (largest contiguous free run / total free frames).
+
+        The emulated memory is random-access so fragmentation never blocks an
+        allocation; the stat tracks how scattered the pool is, which feeds
+        locality-sensitive policies (e.g. prefix-sharing placement).
+        """
+        n_free = len(self._free)
+        if n_free == 0:
+            return 0.0
+        free_mask = ~self._allocated
+        best = run = 0
+        for bit in free_mask:
+            run = run + 1 if bit else 0
+            best = max(best, run)
+        return 1.0 - best / n_free
+
+    def stats(self) -> dict:
+        return {
+            "n_frames": self.n_frames,
+            "free": self.free_count(),
+            "used": self.used_count(),
+            "occupancy": self.occupancy(),
+            "fragmentation": self.fragmentation(),
+        }

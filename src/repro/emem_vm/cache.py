@@ -1,0 +1,154 @@
+"""Per-requester hot-page cache for the emulated memory.
+
+A fixed-capacity, direct-mapped, write-back page cache: requester ``r`` keeps
+``n_sets`` cache lines, each holding one physical frame's worth of slots
+(``page_slots x width``) plus a tag (the frame id, -1 = empty) and a dirty
+bit.  Frame ``f`` can only live in set ``f % n_sets`` -- so every shape below
+is static and every operation jits; there is no LRU bookkeeping to serialize.
+
+The cache is *functional*: operations take and return the state pytree.  The
+miss path is split into ``plan_fill`` (pick, per set, the line to install --
+last miss in batch order wins) and ``apply_fill`` (install pages fetched by
+the caller), because only the caller (:mod:`repro.emem_vm.vm`) can talk to
+the backing emulated memory.  Hit/miss counters live in the state and feed
+the §7.2 cache-aware latency model (``repro.core.emulation.CacheConfig``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    n_requesters: int
+    n_sets: int
+    page_slots: int
+    width: int
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def capacity_slots(self) -> int:
+        return self.n_sets * self.page_slots
+
+    def set_of(self, frames: jax.Array) -> jax.Array:
+        return frames % self.n_sets
+
+
+class HotPageCache:
+    """Namespace for the functional cache operations."""
+
+    @staticmethod
+    def create(spec: CacheSpec) -> dict:
+        r, s = spec.n_requesters, spec.n_sets
+        return {
+            "tag": jnp.full((r, s), -1, jnp.int32),
+            "data": jnp.zeros((r, s, spec.page_slots, spec.width), spec.dtype),
+            "dirty": jnp.zeros((r, s), bool),
+            "hits": jnp.zeros((r,), jnp.int32),
+            "misses": jnp.zeros((r,), jnp.int32),
+        }
+
+    # -- read path ------------------------------------------------------------
+    @staticmethod
+    def lookup(spec: CacheSpec, state: dict, req: int, frames: jax.Array,
+               offsets: jax.Array):
+        """Probe lines for ``frames``; returns (vals [N, width], hit [N])."""
+        sets = spec.set_of(frames)
+        hit = state["tag"][req, sets] == frames
+        vals = state["data"][req, sets, offsets]
+        return vals, hit
+
+    @staticmethod
+    def count(spec: CacheSpec, state: dict, req: int, hit: jax.Array,
+              active: jax.Array) -> dict:
+        """Bump the hit/miss counters for the ``active`` lanes of a batch."""
+        n_hit = jnp.sum(hit & active).astype(jnp.int32)
+        n_act = jnp.sum(active).astype(jnp.int32)
+        state = dict(state)
+        state["hits"] = state["hits"].at[req].add(n_hit)
+        state["misses"] = state["misses"].at[req].add(n_act - n_hit)
+        return state
+
+    # -- write path (write-back: hits never reach the backing memory) ---------
+    @staticmethod
+    def write_hits(spec: CacheSpec, state: dict, req: int, frames: jax.Array,
+                   offsets: jax.Array, values: jax.Array,
+                   mask: jax.Array) -> dict:
+        """Scatter ``values`` into hit lines, marking them dirty."""
+        sets = spec.set_of(frames)
+        safe_sets = jnp.where(mask, sets, spec.n_sets)  # OOB -> dropped
+        state = dict(state)
+        state["data"] = state["data"].at[req, safe_sets, offsets].set(
+            values.astype(spec.dtype), mode="drop")
+        state["dirty"] = state["dirty"].at[req, safe_sets].set(
+            True, mode="drop")
+        return state
+
+    # -- fill path ------------------------------------------------------------
+    @staticmethod
+    def plan_fill(spec: CacheSpec, frames: jax.Array,
+                  miss: jax.Array) -> jax.Array:
+        """Per set, the frame to install: the last missed lane mapping to it
+        (batch order), or -1.  [N] -> [n_sets]."""
+        n = frames.shape[0]
+        sets = spec.set_of(frames)
+        score = jnp.where(miss, jnp.arange(n, dtype=jnp.int32), -1)
+        best = jnp.full((spec.n_sets,), -1, jnp.int32).at[sets].max(score)
+        return jnp.where(best >= 0, frames[jnp.maximum(best, 0)], -1)
+
+    @staticmethod
+    def victims(spec: CacheSpec, state: dict, req: int, chosen: jax.Array):
+        """Lines about to be evicted by ``chosen``: (frame [S], needs_wb [S],
+        pages [S, page_slots, width]).  ``needs_wb`` is True only for valid
+        dirty victims of sets that actually fill."""
+        tag = state["tag"][req]
+        needs_wb = (chosen >= 0) & (tag >= 0) & state["dirty"][req]
+        return tag, needs_wb, state["data"][req]
+
+    @staticmethod
+    def apply_fill(spec: CacheSpec, state: dict, req: int, chosen: jax.Array,
+                   pages: jax.Array) -> dict:
+        """Install ``pages`` [n_sets, page_slots, width] into the chosen sets
+        (lines with chosen == -1 keep their current contents), clean."""
+        fill = chosen >= 0
+        state = dict(state)
+        state["tag"] = state["tag"].at[req].set(
+            jnp.where(fill, chosen, state["tag"][req]))
+        state["data"] = state["data"].at[req].set(
+            jnp.where(fill[:, None, None], pages.astype(spec.dtype),
+                      state["data"][req]))
+        state["dirty"] = state["dirty"].at[req].set(
+            jnp.where(fill, False, state["dirty"][req]))
+        return state
+
+    # -- maintenance -----------------------------------------------------------
+    @staticmethod
+    def invalidate_frame(spec: CacheSpec, state: dict, frame: int) -> dict:
+        """Drop (without write-back) every requester's line holding ``frame``.
+        Used when the frame is freed -- its contents are dead."""
+        match = state["tag"] == frame
+        state = dict(state)
+        state["tag"] = jnp.where(match, -1, state["tag"])
+        state["dirty"] = jnp.where(match, False, state["dirty"])
+        return state
+
+    @staticmethod
+    def dirty_lines(spec: CacheSpec, state: dict, req: int):
+        """(frames [S], dirty [S], pages [S, page_slots, width]) for flush."""
+        return (state["tag"][req], state["dirty"][req] & (state["tag"][req] >= 0),
+                state["data"][req])
+
+    @staticmethod
+    def mark_clean(spec: CacheSpec, state: dict, req: int) -> dict:
+        state = dict(state)
+        state["dirty"] = state["dirty"].at[req].set(False)
+        return state
+
+    @staticmethod
+    def hit_rate(state: dict) -> float:
+        h = float(jnp.sum(state["hits"]))
+        m = float(jnp.sum(state["misses"]))
+        return h / max(h + m, 1.0)

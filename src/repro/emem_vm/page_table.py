@@ -1,0 +1,140 @@
+"""Batched logical->physical page translation for the emulated memory.
+
+One page-table entry (PTE) per logical (virtual) page, packed into an int32:
+
+    bits  0..23  physical frame index (16M frames max)
+    bit   24     readable
+    bit   25     writable
+    bit   26     valid (mapped)
+
+The entry array is laid out exactly like a small EMem -- ``[n_pt_pages,
+pt_slots, 1]`` int32, padded to a whole number of pages -- so the table
+*itself* can be distributed with :func:`repro.core.emem.sharding_for` over
+the same mesh axes as the memory it describes (:meth:`PageTable.emem_spec`).
+
+Mutation (``map``/``unmap``/``protect``) is control-plane and happens on a
+host mirror; translation (:func:`translate`) is the data-plane half -- pure
+``jnp`` over a flat entries array, batched and jittable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import emem
+
+PROT_NONE = 0
+PROT_R = 1
+PROT_W = 2
+PROT_RW = PROT_R | PROT_W
+
+_FRAME_MASK = (1 << 24) - 1
+_R_BIT = 1 << 24
+_W_BIT = 1 << 25
+_VALID_BIT = 1 << 26
+
+
+def pack_pte(frame: int, prot: int = PROT_RW, valid: bool = True) -> int:
+    pte = frame & _FRAME_MASK
+    if prot & PROT_R:
+        pte |= _R_BIT
+    if prot & PROT_W:
+        pte |= _W_BIT
+    if valid:
+        pte |= _VALID_BIT
+    return pte
+
+
+def translate(entries: jax.Array, addrs: jax.Array, page_slots: int):
+    """Translate logical slot addresses through the PTE array.
+
+    entries: flat int32 [n_vpages_padded]; addrs: int32 [R] logical slots.
+    Returns (phys_frame [R], offset [R], readable [R], writable [R]) where
+    the permission masks are False for out-of-range or unmapped pages.
+    """
+    vpage = addrs // page_slots
+    offset = addrs % page_slots
+    in_range = (addrs >= 0) & (vpage < entries.shape[0])
+    pte = entries[jnp.where(in_range, vpage, 0)]
+    valid = in_range & ((pte & _VALID_BIT) != 0)
+    frame = pte & _FRAME_MASK
+    readable = valid & ((pte & _R_BIT) != 0)
+    writable = valid & ((pte & _W_BIT) != 0)
+    return frame, offset, readable, writable
+
+
+class PageTable:
+    """Host-mutable, device-readable logical->physical page table."""
+
+    def __init__(self, n_vpages: int, page_slots: int,
+                 pt_page_slots: int = 128, n_shards: int = 1):
+        self.n_vpages = n_vpages
+        self.page_slots = page_slots          # slots per *data* page
+        pad_to = pt_page_slots * n_shards
+        padded = -(-n_vpages // pad_to) * pad_to
+        self._spec = emem.EMemSpec(n_slots=padded, width=1,
+                                   page_slots=pt_page_slots,
+                                   n_shards=n_shards, dtype=jnp.int32)
+        self._host = np.zeros(padded, np.int32)
+        self._device: jax.Array | None = None
+
+    # -- EMem-style views -----------------------------------------------------
+    @property
+    def emem_spec(self) -> emem.EMemSpec:
+        """Spec of the table's own storage (for sharding / analytics)."""
+        return self._spec
+
+    @property
+    def entries(self) -> jax.Array:
+        """Flat [n_vpages_padded] int32 device view (cached until mutated)."""
+        if self._device is None:
+            self._device = jnp.asarray(self._host)
+        return self._device
+
+    def as_emem(self) -> jax.Array:
+        """[n_pt_pages, pt_slots, 1] view matching :meth:`emem_spec`."""
+        return self.entries.reshape(self._spec.global_shape())
+
+    # -- control plane --------------------------------------------------------
+    def _check(self, vpage: int) -> None:
+        if not (0 <= vpage < self.n_vpages):
+            raise ValueError(f"vpage {vpage} out of range")
+
+    def map(self, vpage: int, frame: int, prot: int = PROT_RW) -> None:
+        self._check(vpage)
+        if self.is_mapped(vpage):
+            raise ValueError(f"vpage {vpage} already mapped")
+        self._host[vpage] = pack_pte(frame, prot, valid=True)
+        self._device = None
+
+    def unmap(self, vpage: int) -> int:
+        """Unmap and return the frame that was mapped there."""
+        self._check(vpage)
+        if not self.is_mapped(vpage):
+            raise ValueError(f"vpage {vpage} not mapped")
+        frame = int(self._host[vpage]) & _FRAME_MASK
+        self._host[vpage] = 0
+        self._device = None
+        return frame
+
+    def protect(self, vpage: int, prot: int) -> None:
+        self._check(vpage)
+        if not self.is_mapped(vpage):
+            raise ValueError(f"vpage {vpage} not mapped")
+        frame = int(self._host[vpage]) & _FRAME_MASK
+        self._host[vpage] = pack_pte(frame, prot, valid=True)
+        self._device = None
+
+    # -- introspection --------------------------------------------------------
+    def is_mapped(self, vpage: int) -> bool:
+        return bool(self._host[vpage] & _VALID_BIT)
+
+    def frame_of(self, vpage: int) -> int:
+        self._check(vpage)
+        if not self.is_mapped(vpage):
+            raise ValueError(f"vpage {vpage} not mapped")
+        return int(self._host[vpage]) & _FRAME_MASK
+
+    def mapped_count(self) -> int:
+        return int((self._host & _VALID_BIT).astype(bool).sum())

@@ -1,0 +1,282 @@
+"""EMemVM: virtual reads/writes over the emulated memory.
+
+``vread``/``vwrite`` take *logical* slot addresses, translate them through
+the page table (:mod:`repro.emem_vm.page_table`), consult the per-requester
+hot-page cache (:mod:`repro.emem_vm.cache`), and fall through to the
+emulated memory (:mod:`repro.core.emem`) on miss -- ``read_ref``/``write_ref``
+single-device, or the distributed ``read``/``write`` collectives when
+constructed with a mesh.
+
+Semantics (mirroring EMem's drop rules):
+  * reads of unmapped / non-readable pages return zeros;
+  * writes to unmapped / non-writable pages are dropped (physically they are
+    redirected to a reserved *trash frame* -- the last physical frame, which
+    the allocator never hands out -- so every batch keeps a static shape);
+  * the cache is write-back: a write hit lands only in the cache and the
+    line is flushed to the emulated memory on eviction, ``flush()``, or when
+    its frame is freed.  Reads are therefore always served from the cache on
+    hit (the cached line may be newer than the memory).
+
+The heavy lifting lives in the pure functions :func:`read_step` /
+:func:`write_step` (state in, state out, static shapes throughout), so the
+whole access path jits; :class:`EMemVM` is the thin stateful facade that the
+serving stack and benchmarks use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import emem
+from repro.emem_vm import page_table as pt_mod
+from repro.emem_vm.allocator import FrameAllocator
+from repro.emem_vm.cache import CacheSpec, HotPageCache
+
+
+@dataclasses.dataclass(frozen=True)
+class VMConfig:
+    """Static description of a virtual emulated memory."""
+    spec: emem.EMemSpec             # physical memory (incl. the trash frame)
+    n_vpages: int                   # logical pages addressable via the table
+    cache_sets: int = 0             # 0 = hot-page cache disabled
+    n_requesters: int = 1
+    #: Sized so no request is ever dropped by the EMem capacity queues
+    #: (capacity == requests-per-shard when factor >= n_shards).
+    capacity_factor: float | None = None
+
+    def __post_init__(self):
+        if self.spec.n_pages < 2:
+            raise ValueError("need >= 2 physical frames (one is the trash "
+                             "frame)")
+
+    @property
+    def trash_frame(self) -> int:
+        return self.spec.n_pages - 1
+
+    @property
+    def trash_addr(self) -> int:
+        return self.trash_frame * self.spec.page_slots
+
+    @property
+    def cap_factor(self) -> float:
+        return (self.capacity_factor if self.capacity_factor is not None
+                else float(self.spec.n_shards))
+
+    def cache_spec(self) -> CacheSpec | None:
+        if self.cache_sets <= 0:
+            return None
+        return CacheSpec(n_requesters=self.n_requesters,
+                         n_sets=self.cache_sets,
+                         page_slots=self.spec.page_slots,
+                         width=self.spec.width, dtype=self.spec.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backing-memory access (single-device ref or distributed collectives)
+# ---------------------------------------------------------------------------
+def _pad_addrs(cfg: VMConfig, addrs: jax.Array, values: jax.Array | None):
+    """Pad a batch to a multiple of n_shards with trash-frame accesses."""
+    s = cfg.spec.n_shards
+    n = addrs.shape[0]
+    pad = (-n) % s
+    if pad:
+        addrs = jnp.concatenate(
+            [addrs, jnp.full((pad,), cfg.trash_addr, addrs.dtype)])
+        if values is not None:
+            values = jnp.concatenate(
+                [values, jnp.zeros((pad, cfg.spec.width), values.dtype)])
+    return addrs, values, n
+
+
+def _mem_read(cfg: VMConfig, mesh: Mesh | None, axes, data: jax.Array,
+              addrs: jax.Array) -> jax.Array:
+    if mesh is None:
+        return emem.read_ref(cfg.spec, data, addrs)
+    addrs, _, n = _pad_addrs(cfg, addrs, None)
+    out = emem.read(cfg.spec, mesh, axes, data, addrs, cfg.cap_factor)
+    return out[:n]
+
+
+def _mem_write(cfg: VMConfig, mesh: Mesh | None, axes, data: jax.Array,
+               addrs: jax.Array, values: jax.Array) -> jax.Array:
+    if mesh is None:
+        return emem.write_ref(cfg.spec, data, addrs, values)
+    addrs, values, _ = _pad_addrs(cfg, addrs, values)
+    return emem.write(cfg.spec, mesh, axes, data, addrs, values,
+                      cfg.cap_factor)
+
+
+# ---------------------------------------------------------------------------
+# Pure access steps (jittable: state in, state out, static shapes)
+# ---------------------------------------------------------------------------
+def read_step(cfg: VMConfig, mesh, axes, entries: jax.Array, data: jax.Array,
+              cache: dict | None, addrs: jax.Array, requester: int = 0):
+    """Virtual read.  Returns (out [R, width], data', cache')."""
+    ps = cfg.spec.page_slots
+    addrs = jnp.asarray(addrs, jnp.int32)
+    frames, offsets, readable, _ = pt_mod.translate(entries, addrs, ps)
+    phys = jnp.where(readable, frames * ps + offsets, cfg.trash_addr)
+
+    cspec = cfg.cache_spec()
+    if cspec is None or cache is None:
+        out = _mem_read(cfg, mesh, axes, data, phys)
+        return jnp.where(readable[:, None], out, 0), data, cache
+
+    cache_vals, hit = HotPageCache.lookup(cspec, cache, requester, frames,
+                                          offsets)
+    mem_vals = _mem_read(cfg, mesh, axes, data, phys)
+    out = jnp.where((hit & readable)[:, None], cache_vals, mem_vals)
+    out = jnp.where(readable[:, None], out, 0)
+    cache = HotPageCache.count(cspec, cache, requester, hit, readable)
+
+    # fill: one candidate per set (last miss wins), evicting dirty victims
+    miss = readable & ~hit
+    chosen = HotPageCache.plan_fill(cspec, frames, miss)
+    victim_tag, needs_wb, victim_pages = HotPageCache.victims(
+        cspec, cache, requester, chosen)
+    lane = jnp.arange(ps)
+    wb_addrs = (jnp.where(needs_wb, victim_tag, cfg.trash_frame)[:, None] * ps
+                + lane).reshape(-1)
+    data = _mem_write(cfg, mesh, axes, data, wb_addrs,
+                      victim_pages.reshape(-1, cfg.spec.width))
+    fetch = (jnp.where(chosen >= 0, chosen, cfg.trash_frame)[:, None] * ps
+             + lane).reshape(-1)
+    pages = _mem_read(cfg, mesh, axes, data, fetch).reshape(
+        cspec.n_sets, ps, cfg.spec.width)
+    cache = HotPageCache.apply_fill(cspec, cache, requester, chosen, pages)
+    return out, data, cache
+
+
+def write_step(cfg: VMConfig, mesh, axes, entries: jax.Array, data: jax.Array,
+               cache: dict | None, addrs: jax.Array, values: jax.Array,
+               requester: int = 0):
+    """Virtual write.  Returns (data', cache')."""
+    ps = cfg.spec.page_slots
+    addrs = jnp.asarray(addrs, jnp.int32)
+    frames, offsets, _, writable = pt_mod.translate(entries, addrs, ps)
+    phys = frames * ps + offsets
+
+    cspec = cfg.cache_spec()
+    if cspec is None or cache is None:
+        safe = jnp.where(writable, phys, cfg.trash_addr)
+        return _mem_write(cfg, mesh, axes, data, safe, values), cache
+
+    _, hit = HotPageCache.lookup(cspec, cache, requester, frames, offsets)
+    cache = HotPageCache.write_hits(cspec, cache, requester, frames, offsets,
+                                    values, hit & writable)
+    cache = HotPageCache.count(cspec, cache, requester, hit, writable)
+    # no-write-allocate: misses go straight to the emulated memory
+    safe = jnp.where(writable & ~hit, phys, cfg.trash_addr)
+    data = _mem_write(cfg, mesh, axes, data, safe, values)
+    return data, cache
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+class EMemVM:
+    """Stateful virtual-memory facade over one emulated memory."""
+
+    def __init__(self, cfg: VMConfig, mesh: Mesh | None = None,
+                 axes: Sequence[str] = ("data",)):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axes = tuple(axes)
+        spec = cfg.spec
+        data = emem.create(spec)
+        if mesh is not None:
+            data = jax.device_put(data, emem.sharding_for(spec, mesh,
+                                                          self.axes))
+        self.data = data
+        # usable frames exclude the trash frame (spec.n_pages - 1)
+        self.allocator = FrameAllocator(spec.n_pages - 1)
+        self.page_table = pt_mod.PageTable(cfg.n_vpages, spec.page_slots)
+        cspec = cfg.cache_spec()
+        self.cache = HotPageCache.create(cspec) if cspec else None
+
+    # -- mapping (control plane) ---------------------------------------------
+    def map_page(self, vpage: int, prot: int = pt_mod.PROT_RW) -> int:
+        frame = self.allocator.alloc()
+        self.page_table.map(vpage, frame, prot)
+        return frame
+
+    def map_range(self, vpage_start: int, n: int,
+                  prot: int = pt_mod.PROT_RW) -> list[int]:
+        return [self.map_page(vpage_start + i, prot) for i in range(n)]
+
+    def unmap_page(self, vpage: int) -> None:
+        frame = self.page_table.frame_of(vpage)
+        self._writeback_frame(frame)
+        if self.cache is not None:
+            self.cache = HotPageCache.invalidate_frame(
+                self.cfg.cache_spec(), self.cache, frame)
+        self.page_table.unmap(vpage)
+        self.allocator.free(frame)
+
+    def protect(self, vpage: int, prot: int) -> None:
+        self.page_table.protect(vpage, prot)
+
+    # -- data plane -----------------------------------------------------------
+    def vread(self, addrs, requester: int = 0) -> jax.Array:
+        out, self.data, self.cache = read_step(
+            self.cfg, self.mesh, self.axes, self.page_table.entries,
+            self.data, self.cache, addrs, requester)
+        return out
+
+    def vwrite(self, addrs, values, requester: int = 0) -> None:
+        self.data, self.cache = write_step(
+            self.cfg, self.mesh, self.axes, self.page_table.entries,
+            self.data, self.cache, jnp.asarray(addrs, jnp.int32),
+            jnp.asarray(values), requester)
+
+    # -- cache maintenance ----------------------------------------------------
+    def _writeback_frame(self, frame: int) -> None:
+        """Flush any requester's dirty line holding ``frame`` to memory."""
+        if self.cache is None:
+            return
+        cspec = self.cfg.cache_spec()
+        sets = frame % cspec.n_sets
+        tags = np.asarray(self.cache["tag"][:, sets])
+        dirty = np.asarray(self.cache["dirty"][:, sets])
+        ps = self.cfg.spec.page_slots
+        for req in range(cspec.n_requesters):
+            if tags[req] == frame and dirty[req]:
+                addrs = frame * ps + jnp.arange(ps, dtype=jnp.int32)
+                self.data = _mem_write(self.cfg, self.mesh, self.axes,
+                                       self.data, addrs,
+                                       self.cache["data"][req, sets])
+
+    def flush(self) -> None:
+        """Write back every dirty line and mark the whole cache clean."""
+        if self.cache is None:
+            return
+        cspec = self.cfg.cache_spec()
+        ps = self.cfg.spec.page_slots
+        lane = jnp.arange(ps)
+        for req in range(cspec.n_requesters):
+            tags, dirty, pages = HotPageCache.dirty_lines(cspec, self.cache,
+                                                          req)
+            addrs = (jnp.where(dirty, tags, self.cfg.trash_frame)[:, None] * ps
+                     + lane).reshape(-1)
+            self.data = _mem_write(self.cfg, self.mesh, self.axes, self.data,
+                                   addrs, pages.reshape(-1,
+                                                        self.cfg.spec.width))
+            self.cache = HotPageCache.mark_clean(cspec, self.cache, req)
+
+    # -- introspection --------------------------------------------------------
+    def counters(self) -> dict:
+        if self.cache is None:
+            return {"hits": 0, "misses": 0, "hit_rate": 0.0}
+        hits = int(jnp.sum(self.cache["hits"]))
+        misses = int(jnp.sum(self.cache["misses"]))
+        return {"hits": hits, "misses": misses,
+                "hit_rate": hits / max(hits + misses, 1)}
+
+    def stats(self) -> dict:
+        return {**self.allocator.stats(), **self.counters(),
+                "mapped_pages": self.page_table.mapped_count()}

@@ -77,10 +77,18 @@ class ModelConfig:
     moe_dispatch: str = "scatter"        # "scatter" | "sort" (gather-only)
     ssd_chunk: int = 128
     remat: str = "block"                 # "none" | "block" | "dots" | "full"
-    kv_layout: str = "batch"             # "batch" | "paged" (EMem seq-parallel)
+    #: "batch"  -- [B, Hkv, S, hd] per layer (batch-sharded);
+    #: "paged"  -- EMem page store, fixed max_pages reservation per slot;
+    #: "pooled" -- EMem page store, frames allocated on demand from a shared
+    #:             pool via the emem_vm page tables (decouples the decode
+    #:             batch width from the KV memory reservation).
+    kv_layout: str = "batch"
     kv_dtype: str | None = None          # KV cache dtype override (e.g.
                                          # "float8_e4m3fn" -- halves KV traffic)
     kv_page_slots: int = 256
+    #: Total frames in the pooled KV store (kv_layout="pooled"); None sizes
+    #: the pool like the fixed layout (batch * ceil(max_len / page_slots)).
+    kv_pool_pages: int | None = None
     logical_rules: str = "fsdp_tp"       # parallel/sharding.py rule set
     #: Constrain INNER activations (q/k/v, MLP hidden) to batch-sharded,
     #: head/ff-model-sharded layouts.  Without this GSPMD may contract over

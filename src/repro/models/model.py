@@ -57,7 +57,9 @@ class Model:
         return T.prefill(self.cfg, params, batch, max_len)
 
     def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
-                    lengths: jax.Array):
+                    lengths: jax.Array, write_mask=None):
         if self.cfg.family == "encdec":
+            # encdec decode has no masked-write path (not served batched)
             return encdec.decode_step(self.cfg, params, tokens, cache, lengths)
-        return T.decode_step(self.cfg, params, tokens, cache, lengths)
+        return T.decode_step(self.cfg, params, tokens, cache, lengths,
+                             write_mask)

@@ -165,10 +165,13 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
     cache: dict = {}
     for i in range(cfg.layer_period):
         if cfg.layer_kind(i) == "attn":
-            if cfg.kv_layout == "paged":
+            if cfg.kv_layout in ("paged", "pooled"):
                 slots = cfg.kv_page_slots
                 max_pages = -(-max_len // slots)
-                n_pages = batch_size * max_pages
+                if cfg.kv_layout == "pooled":
+                    n_pages = cfg.kv_pool_pages or batch_size * max_pages
+                else:
+                    n_pages = batch_size * max_pages
                 entry = {
                     "k_pages": jnp.zeros((np_, n_pages, slots, hkv, hd),
                                          kv_dtype),
@@ -192,6 +195,18 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
                                  jnp.float32),
             }
         cache[f"b{i}"] = entry
+    if cfg.kv_layout == "pooled" and any(
+            cfg.layer_kind(i) == "attn" for i in range(cfg.layer_period)):
+        # frame-pool translation state, shared by every attention layer and
+        # maintained host-side by the serving engine (repro.serve.engine)
+        slots = cfg.kv_page_slots
+        max_pages = -(-max_len // slots)
+        n_frames = cfg.kv_pool_pages or batch_size * max_pages
+        cache["vm"] = {
+            "block_table": jnp.full((batch_size, max_pages), -1, jnp.int32),
+            "frame_owner": jnp.full((n_frames,), -1, jnp.int32),
+            "frame_lpage": jnp.zeros((n_frames,), jnp.int32),
+        }
     return cache
 
 
@@ -267,41 +282,67 @@ def prefill(cfg: ModelConfig, params: Params, batch: dict, max_len: int):
 # ---------------------------------------------------------------------------
 # Decode (one token; batch or paged KV layout)
 # ---------------------------------------------------------------------------
+def _mask_entry(new: dict, old: dict, write_mask: jax.Array) -> dict:
+    """Keep ``old`` state for batch elements masked off from writing.
+    Every leaf here is batch-leading ([B, ...])."""
+    return {k: jnp.where(write_mask.reshape((-1,) + (1,) * (v.ndim - 1)),
+                         v, old[k])
+            for k, v in new.items()}
+
+
 def block_decode(cfg: ModelConfig, i: int, p: Params, x: jax.Array,
-                 entry: dict, lengths: jax.Array):
+                 entry: dict, lengths: jax.Array, vm: dict | None = None,
+                 write_mask=None):
     h = L.rms_norm(x, p["ln_mix"]["w"], cfg.rms_eps)
     if cfg.layer_kind(i) == "attn":
-        if cfg.kv_layout == "paged":
+        if cfg.kv_layout in ("paged", "pooled"):
             from repro.parallel.paged_attention import paged_decode_block
-            out, entry = paged_decode_block(cfg, p["attn"], h, entry, lengths)
+            out, entry = paged_decode_block(cfg, p["attn"], h, entry, lengths,
+                                            vm, write_mask)
         else:
+            old = entry
             out, k, v = L.decode_attention_block(
                 cfg, p["attn"], h, entry["k"], entry["v"], lengths)
             entry = {"k": k, "v": v}
+            if write_mask is not None:
+                entry = _mask_entry(entry, old, write_mask)
         x = x + out
     else:
+        old = entry
         out, conv, ssd = S.ssm_decode_step(cfg, p["mamba"], h,
                                            entry["conv"], entry["ssd"])
         x = x + out
         entry = {"conv": conv, "ssd": ssd}
+        if write_mask is not None:
+            entry = _mask_entry(entry, old, write_mask)
     return _ffn(cfg, i, p, x), entry
 
 
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
-                cache: dict, lengths: jax.Array):
+                cache: dict, lengths: jax.Array, write_mask=None):
     """One decode step for every sequence.
 
     tokens: [B, 1] int32 (the tokens just sampled); lengths: [B] valid length
     INCLUDING these tokens.  Returns (logits [B, vocab], new cache).
+
+    write_mask: optional [B] bool -- sequences masked off keep their cache
+    (KV and SSM state) unchanged.  The serving engine uses it so that
+    prefilling one slot through the shared decode batch cannot clobber the
+    other slots' latest KV position or recurrent state.
     """
     x = L.embed_tokens(cfg, params["embed"], tokens).astype(cfg.compute_dtype)
+    # pooled layout: the frame-pool tables ride outside the period scan
+    # (engine-managed, identical for every layer, no leading period axis)
+    vm = cache.get("vm")
+    blocks = {k: v for k, v in cache.items() if k.startswith("b")}
 
     def period_step(h, scanees):
         period_params, entries = scanees
         new_entries = {}
         for i in range(cfg.layer_period):
             h, new_entries[f"b{i}"] = block_decode(
-                cfg, i, period_params[f"b{i}"], h, entries[f"b{i}"], lengths)
+                cfg, i, period_params[f"b{i}"], h, entries[f"b{i}"], lengths,
+                vm, write_mask)
         return maybe_constrain(h, ("dp", None, None)), new_entries
 
     stacked = {k: v for k, v in params.items() if k.startswith("b")}
@@ -309,11 +350,13 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
         entries_list = []
         for j in range(cfg.n_periods):
             x, e = period_step(x, (jax.tree.map(lambda v: v[j], stacked),
-                                   jax.tree.map(lambda v: v[j], cache)))
+                                   jax.tree.map(lambda v: v[j], blocks)))
             entries_list.append(e)
         cache = jax.tree.map(lambda *xs: jnp.stack(xs), *entries_list)
     else:
-        x, cache = jax.lax.scan(period_step, x, (stacked, cache))
+        x, cache = jax.lax.scan(period_step, x, (stacked, blocks))
+    if vm is not None:
+        cache = {**cache, "vm": vm}
     x = L.rms_norm(x, params["ln_f"]["w"], cfg.rms_eps)
     logits = L.unembed(cfg, params["embed"], x[:, -1]).astype(jnp.float32)
     if cfg.vocab_padded != cfg.vocab_size:

@@ -37,11 +37,13 @@ def _flat_axis_index(axes: tuple[str, ...]) -> jax.Array:
 
 
 def _partial_paged_attention(cfg: ModelConfig, q, k_pages, v_pages, lengths,
-                             *, sid, n_shards: int, max_pages: int,
-                             head_start):
+                             *, b_of, lpage, head_start):
     """Partial attention of q against this shard's pages.
 
     q: [B, Hl, hd] (local heads); k/v_pages: [np_loc, slots, Hkv, hd];
+    b_of/lpage: [np_loc] sequence id (-1 = unowned page, fully masked) and
+    logical in-sequence page of each local page -- fixed layouts derive them
+    arithmetically, the pooled layout looks them up in the frame tables.
     Returns (acc [B, Hl, hd] unnormalized, m [B, Hl], l [B, Hl])."""
     b, hl, hd = q.shape
     np_loc, slots, hkv, _ = k_pages.shape
@@ -49,9 +51,7 @@ def _partial_paged_attention(cfg: ModelConfig, q, k_pages, v_pages, lengths,
     group = cfg.n_heads // cfg.n_kv_heads
 
     # which sequence / in-sequence position each local token belongs to
-    g_all = jnp.arange(np_loc) * n_shards + sid            # global page ids
-    b_of = g_all // max_pages                              # [np_loc]
-    pos = (g_all % max_pages)[:, None] * slots + jnp.arange(slots)
+    pos = lpage[:, None] * slots + jnp.arange(slots)
     tok_b = jnp.broadcast_to(b_of[:, None], pos.shape).reshape(-1)
     tok_pos = pos.reshape(-1)                              # [T_loc]
 
@@ -77,18 +77,32 @@ def _partial_paged_attention(cfg: ModelConfig, q, k_pages, v_pages, lengths,
 
 
 def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
-                           v_pages, lengths):
+                           v_pages, lengths, vm: dict | None = None,
+                           write_mask=None):
     """q: [B, H, hd]; k_new/v_new: [B, Hkv, hd] (rope'd at position len-1);
-    k/v_pages: [n_pages, slots, Hkv, hd] global.  Returns (out, pages')."""
+    k/v_pages: [n_pages, slots, Hkv, hd] global.  Returns (out, pages').
+
+    With ``vm`` (the pooled layout's translation state: ``block_table``
+    [B, max_lpages] logical page -> frame, ``frame_owner``/``frame_lpage``
+    [n_frames] inverse maps, -1 = free) pages are allocated on demand from a
+    shared frame pool instead of a fixed per-sequence reservation; the
+    tables are host-managed by the serving engine via ``repro.emem_vm``.
+
+    ``write_mask`` [B] suppresses the K/V write for masked-off sequences --
+    the serving engine's admit() runs the whole decode batch to prefill one
+    slot, and without the mask every other in-flight slot would have its
+    latest position overwritten with pad-token K/V."""
     ctx = mesh_ctx.get_context()
     b, h, hd = q.shape
     n_pages, slots = k_pages.shape[0], k_pages.shape[1]
     max_pages = n_pages // b
+    if write_mask is None:
+        write_mask = jnp.ones((b,), bool)
 
     if ctx is None or ctx.n_kv_shards * ctx.tp == 1:
         # single-device fallback: same math, no collectives
         out, kp, vp = _single_shard(cfg, q, k_new, v_new, k_pages, v_pages,
-                                    lengths, max_pages)
+                                    lengths, max_pages, vm, write_mask)
         return out, kp, vp
 
     n_shards = ctx.n_kv_shards
@@ -97,22 +111,32 @@ def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
     hl = h // ctx.tp
     kv_axes = ctx.kv_axes
     tp_axis = ctx.tp_axis
+    pooled = vm is not None
 
-    def body(q_l, k_new_l, v_new_l, kp_l, vp_l, len_l):
+    def body(q_l, k_new_l, v_new_l, kp_l, vp_l, len_l, bt, fo, fl, wm):
         sid = _flat_axis_index(kv_axes)
         tp_idx = jax.lax.axis_index(tp_axis)
         np_loc = kp_l.shape[0]
         # WRITE: scatter the new K/V row into its owning shard's page
         pidx = (len_l - 1) // slots
-        gpage = jnp.arange(b) * max_pages + pidx
-        rows = jnp.where(gpage % n_shards == sid, gpage // n_shards, np_loc)
+        if pooled:
+            gpage = bt[jnp.arange(b), pidx]          # frame via block table
+        else:
+            gpage = jnp.arange(b) * max_pages + pidx
+        rows = jnp.where(wm & (gpage >= 0) & (gpage % n_shards == sid),
+                         gpage // n_shards, np_loc)
         off = (len_l - 1) % slots
         kp_l = kp_l.at[rows, off].set(k_new_l.astype(kp_l.dtype), mode="drop")
         vp_l = vp_l.at[rows, off].set(v_new_l.astype(vp_l.dtype), mode="drop")
         # READ/compute: partial attention over owned pages
+        g_all = jnp.arange(np_loc) * n_shards + sid   # global page/frame ids
+        if pooled:
+            b_of, lpage = fo[g_all], fl[g_all]
+        else:
+            b_of, lpage = g_all // max_pages, g_all % max_pages
         acc, m, l = _partial_paged_attention(
-            cfg, q_l, kp_l, vp_l, len_l, sid=sid, n_shards=n_shards,
-            max_pages=max_pages, head_start=tp_idx * hl)
+            cfg, q_l, kp_l, vp_l, len_l, b_of=b_of, lpage=lpage,
+            head_start=tp_idx * hl)
         # merge partials across the emulated-memory shards
         m_glob = jax.lax.pmax(m, kv_axes)
         w = jnp.exp(m - m_glob)
@@ -121,33 +145,53 @@ def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
         out = (num / jnp.where(den == 0.0, 1.0, den)[..., None]).astype(q_l.dtype)
         return out, kp_l, vp_l
 
+    if vm is None:
+        dummy = jnp.zeros((1,), jnp.int32)
+        bt, fo, fl = dummy[None], dummy, dummy
+    else:
+        bt, fo, fl = vm["block_table"], vm["frame_owner"], vm["frame_lpage"]
     kv_spec = P(kv_axes if len(kv_axes) > 1 else kv_axes[0])
     fn = shard_map(
         body, mesh=ctx.mesh,
-        in_specs=(P(None, tp_axis, None), P(), P(), kv_spec, kv_spec, P()),
+        in_specs=(P(None, tp_axis, None), P(), P(), kv_spec, kv_spec, P(),
+                  P(), P(), P(), P()),
         out_specs=(P(None, tp_axis, None), kv_spec, kv_spec),
         check_rep=False)
-    return fn(q, k_new, v_new, k_pages, v_pages, lengths)
+    return fn(q, k_new, v_new, k_pages, v_pages, lengths, bt, fo, fl,
+              write_mask)
 
 
-def _single_shard(cfg, q, k_new, v_new, k_pages, v_pages, lengths, max_pages):
+def _single_shard(cfg, q, k_new, v_new, k_pages, v_pages, lengths, max_pages,
+                  vm: dict | None = None, write_mask=None):
     b, h, hd = q.shape
-    slots = k_pages.shape[1]
+    n_pages, slots = k_pages.shape[0], k_pages.shape[1]
     pidx = (lengths - 1) // slots
-    rows = jnp.arange(b) * max_pages + pidx
+    if vm is not None:
+        rows = vm["block_table"][jnp.arange(b), pidx]
+        safe_rows = jnp.where(rows >= 0, rows, n_pages)
+        b_of, lpage = vm["frame_owner"], vm["frame_lpage"]
+    else:
+        safe_rows = jnp.arange(b) * max_pages + pidx
+        g = jnp.arange(n_pages)
+        b_of, lpage = g // max_pages, g % max_pages
+    if write_mask is not None:
+        safe_rows = jnp.where(write_mask, safe_rows, n_pages)
     off = (lengths - 1) % slots
-    k_pages = k_pages.at[rows, off].set(k_new.astype(k_pages.dtype))
-    v_pages = v_pages.at[rows, off].set(v_new.astype(v_pages.dtype))
+    k_pages = k_pages.at[safe_rows, off].set(k_new.astype(k_pages.dtype),
+                                             mode="drop")
+    v_pages = v_pages.at[safe_rows, off].set(v_new.astype(v_pages.dtype),
+                                             mode="drop")
     acc, m, l = _partial_paged_attention(
-        cfg, q, k_pages, v_pages, lengths, sid=jnp.int32(0), n_shards=1,
-        max_pages=max_pages, head_start=jnp.int32(0))
+        cfg, q, k_pages, v_pages, lengths, b_of=b_of, lpage=lpage,
+        head_start=jnp.int32(0))
     out = (acc / jnp.where(l == 0.0, 1.0, l)[..., None]).astype(q.dtype)
     return out, k_pages, v_pages
 
 
 def paged_decode_block(cfg: ModelConfig, p_attn: dict, h: jax.Array,
-                       entry: dict, lengths: jax.Array):
-    """Attention sub-block for decode with the paged KV layout.
+                       entry: dict, lengths: jax.Array,
+                       vm: dict | None = None, write_mask=None):
+    """Attention sub-block for decode with the paged/pooled KV layout.
 
     h: [B, 1, d] (already normed).  Returns (out [B, 1, d], new entry)."""
     from repro.models import layers as L
@@ -156,6 +200,6 @@ def paged_decode_block(cfg: ModelConfig, p_attn: dict, h: jax.Array,
     q, k_new, v_new = L._project_qkv(cfg, p_attn, h, positions)
     out, kp, vp = paged_decode_attention(
         cfg, q[:, :, 0], k_new[:, :, 0], v_new[:, :, 0],
-        entry["k_pages"], entry["v_pages"], lengths)
+        entry["k_pages"], entry["v_pages"], lengths, vm, write_mask)
     out = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p_attn["wo"]
     return out, {"k_pages": kp, "v_pages": vp}

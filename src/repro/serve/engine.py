@@ -4,8 +4,20 @@ The engine owns a fixed-capacity decode batch (B slots).  Requests are
 admitted by the scheduler into free slots, prefilled one at a time (their KV
 written into the slot), then advanced together by the shared decode step --
 the standard continuous-batching pattern (vLLM/Orca) on top of this repo's
-model facade.  With ``kv_layout="paged"`` the cache is the emulated-memory
-page store and decode runs the sequence-parallel merge path.
+model facade.
+
+KV layouts:
+  * ``kv_layout="paged"``  -- the emulated-memory page store with a fixed
+    ``max_pages`` reservation per slot (decode runs the sequence-parallel
+    merge path);
+  * ``kv_layout="pooled"`` -- same page store, but frames are allocated on
+    demand from a shared pool (``repro.emem_vm.FrameAllocator``) as each
+    sequence grows, and freed when the request completes.  The block /
+    frame-owner tables live host-side here and are pushed into the cache
+    pytree (``cache["vm"]``) before every decode.  Admission checks
+    free-frame *headroom* (worst-case pages for the request vs frames not
+    yet claimed by running requests), not just free slots -- so the batch
+    width can exceed what a fixed per-slot reservation would allow.
 """
 from __future__ import annotations
 
@@ -45,8 +57,111 @@ class ServeEngine:
         self.lengths = jnp.zeros((ecfg.slots,), jnp.int32)
         self.slot_req: list[Request | None] = [None] * ecfg.slots
         self.budget = np.zeros(ecfg.slots, np.int64)
-        self._decode = jax.jit(
-            lambda p, t, c, l: model.decode_step(p, t, c, l))
+        self._decode_jit = jax.jit(
+            lambda p, t, c, l, m: model.decode_step(p, t, c, l,
+                                                    write_mask=m))
+        self.pooled = model.cfg.kv_layout == "pooled"
+        if self.pooled:
+            from repro.emem_vm import FrameAllocator
+            slots_pp = model.cfg.kv_page_slots
+            self.page_slots = slots_pp
+            self.max_lpages = -(-ecfg.max_len // slots_pp)
+            self.n_frames = (model.cfg.kv_pool_pages
+                             or ecfg.slots * self.max_lpages)
+            self.allocator = FrameAllocator(self.n_frames)
+            self._block_table = np.full((ecfg.slots, self.max_lpages), -1,
+                                        np.int32)
+            self._frame_owner = np.full(self.n_frames, -1, np.int32)
+            self._frame_lpage = np.zeros(self.n_frames, np.int32)
+            # worst-case frames reserved at admission but not yet allocated
+            self._unmaterialized = np.zeros(ecfg.slots, np.int64)
+            self._vm_stale = True
+
+    def _decode(self, params, toks, cache, lengths, write_mask=None):
+        """One jitted decode, synced before returning.
+
+        ``write_mask`` limits which slots commit cache writes this step --
+        decode runs the full batch, so without it a prefill would overwrite
+        every other in-flight slot's newest KV position (and SSM state) with
+        pad-token state.
+
+        The sync matters: XLA CPU async dispatch (observed on jax 0.4.37)
+        corrupts results when executions of the same executable overlap, as
+        they do in the prefill loop which never reads ``logits`` between
+        tokens.  Blocking per step serializes the executions.  (Host-side
+        buffers are also always *copied* in with ``jnp.array`` --
+        ``jnp.asarray`` zero-copies numpy memory, racing later in-place
+        mutation of the same buffer.)
+        """
+        if write_mask is None:
+            write_mask = np.ones(self.ecfg.slots, bool)
+        logits, cache = self._decode_jit(params, toks, cache, lengths,
+                                         jnp.array(write_mask))
+        jax.block_until_ready(logits)
+        return logits, cache
+
+    # -- pooled frame management ---------------------------------------------
+    def frames_needed(self, req: Request) -> int:
+        """Worst-case page count for ``req`` (its own length bound, not the
+        fixed layout's blanket max_len reservation)."""
+        prompt_len = max(len(req.prompt), 1)       # empty prompt = 1 BOS
+        total = min(prompt_len + req.max_new_tokens, self.ecfg.max_len)
+        return -(-total // self.page_slots)
+
+    def can_admit(self, req: Request) -> bool:
+        """Admission control: the request must fit the engine at all (a
+        prompt needs room for at least one generated token under max_len),
+        have a free slot, and (pooled only) enough free-frame headroom
+        beyond what running requests may still claim."""
+        if max(len(req.prompt), 1) > self.ecfg.max_len - 2:
+            return False
+        if not self.free_slots():
+            return False
+        if not self.pooled:
+            return True
+        headroom = self.allocator.free_count() - int(
+            self._unmaterialized.sum())
+        return headroom >= self.frames_needed(req)
+
+    def _ensure_frame(self, slot: int, new_len: int) -> None:
+        """Materialize the frame backing position ``new_len - 1``."""
+        if not self.pooled:
+            return
+        lpage = (new_len - 1) // self.page_slots
+        if self._block_table[slot, lpage] >= 0:
+            return
+        frame = self.allocator.alloc()   # covered by the admission reserve
+        self._block_table[slot, lpage] = frame
+        self._frame_owner[frame] = slot
+        self._frame_lpage[frame] = lpage
+        self._unmaterialized[slot] -= 1
+        self._vm_stale = True
+
+    def _release_frames(self, slot: int) -> None:
+        if not self.pooled:
+            return
+        frames = self._block_table[slot][self._block_table[slot] >= 0]
+        if len(frames):
+            self.allocator.bulk_free(frames)
+            self._frame_owner[frames] = -1
+        self._block_table[slot] = -1
+        self._unmaterialized[slot] = 0
+        self._vm_stale = True
+
+    def _sync_vm(self) -> None:
+        """Push the host-side tables into the cache pytree if they changed."""
+        if self.pooled and self._vm_stale:
+            self.cache["vm"] = {
+                "block_table": jnp.array(self._block_table),
+                "frame_owner": jnp.array(self._frame_owner),
+                "frame_lpage": jnp.array(self._frame_lpage),
+            }
+            self._vm_stale = False
+
+    def pool_stats(self) -> dict:
+        if not self.pooled:
+            return {}
+        return self.allocator.stats()
 
     # -- admission ----------------------------------------------------------
     def free_slots(self) -> list[int]:
@@ -54,25 +169,41 @@ class ServeEngine:
 
     def admit(self, req: Request, slot: int) -> None:
         """Prefill a request into a slot (token-by-token writes share the
-        decode path, so this works for both KV layouts)."""
+        decode path, so this works for every KV layout)."""
         assert self.slot_req[slot] is None
+        if not self.can_admit(req):      # before any state is mutated
+            raise RuntimeError(
+                "inadmissible request (prompt too long for max_len, or no "
+                "free-frame headroom)")
         self.slot_req[slot] = req
         self.budget[slot] = req.max_new_tokens
         self._reset_slot(slot)
+        if self.pooled:
+            self._unmaterialized[slot] = self.frames_needed(req)
+        # an empty prompt still needs one position to produce first logits:
+        # treat token 0 as an implicit BOS so `logits` is always bound
+        prompt = req.prompt if len(req.prompt) else np.zeros(1, np.int32)
+        mask = np.zeros(self.ecfg.slots, bool)
+        mask[slot] = True                # only this slot commits KV writes
         lengths = np.array(self.lengths)
-        for t, tok in enumerate(req.prompt):
+        for t, tok in enumerate(prompt):
             lengths[slot] = t + 1
-            self.lengths = jnp.asarray(lengths)
+            # jnp.array (copy=True), NOT jnp.asarray: asarray zero-copies the
+            # numpy buffer on CPU, and with async dispatch the in-flight
+            # decode would race the next iteration's in-place mutation
+            self.lengths = jnp.array(lengths)
+            self._ensure_frame(slot, t + 1)
             toks = np.zeros((self.ecfg.slots, 1), np.int32)
             toks[slot, 0] = tok
+            self._sync_vm()
             logits, self.cache = self._decode(
-                self.params, jnp.asarray(toks), self.cache, self.lengths)
+                self.params, jnp.array(toks), self.cache, self.lengths, mask)
         req._next = int(jnp.argmax(logits[slot, :self.model.cfg.vocab_size]))
 
     def _reset_slot(self, slot: int) -> None:
         lengths = np.array(self.lengths)
         lengths[slot] = 0
-        self.lengths = jnp.asarray(lengths)
+        self.lengths = jnp.array(lengths)
 
     # -- decode -------------------------------------------------------------
     def step(self) -> None:
@@ -81,15 +212,19 @@ class ServeEngine:
         if not active:
             return
         toks = np.zeros((self.ecfg.slots, 1), np.int32)
+        mask = np.zeros(self.ecfg.slots, bool)
         lengths = np.array(self.lengths)
         for i in active:
             req = self.slot_req[i]
             toks[i, 0] = req._next
             req.output.append(req._next)
             lengths[i] += 1
-        self.lengths = jnp.asarray(lengths)
+            mask[i] = True
+            self._ensure_frame(i, int(lengths[i]))
+        self.lengths = jnp.array(lengths)
+        self._sync_vm()
         logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), self.cache, self.lengths)
+            self.params, jnp.array(toks), self.cache, self.lengths, mask)
         for i in active:
             req = self.slot_req[i]
             req._next = int(jnp.argmax(
@@ -101,3 +236,4 @@ class ServeEngine:
                     int(lengths[i]) >= self.ecfg.max_len - 1:
                 req.done = True
                 self.slot_req[i] = None
+                self._release_frames(i)

@@ -1,4 +1,9 @@
-"""Request scheduler: FIFO admission with continuous batching."""
+"""Request scheduler: FIFO admission with continuous batching.
+
+Admission asks the engine for headroom (``engine.can_admit``): with the
+pooled KV layout a free slot is not enough -- the shared frame pool must
+also have room for the request's worst-case page count.
+"""
 from __future__ import annotations
 
 import collections
@@ -12,6 +17,7 @@ class Scheduler:
         self.engine = engine
         self.queue: collections.deque[Request] = collections.deque()
         self.completed: list[Request] = []
+        self._completed_ids: set[int] = set()    # id(req): uids may collide
 
     def submit(self, reqs: Iterable[Request]) -> None:
         self.queue.extend(reqs)
@@ -20,6 +26,8 @@ class Scheduler:
         for slot in self.engine.free_slots():
             if not self.queue:
                 break
+            if not self.engine.can_admit(self.queue[0]):
+                break                     # FIFO: wait for headroom
             self.engine.admit(self.queue.popleft(), slot)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
@@ -30,10 +38,16 @@ class Scheduler:
                                  for r in self.engine.slot_req)):
             self._admit_waiting()
             before = [r for r in self.engine.slot_req if r is not None]
+            if not before and self.queue:
+                raise RuntimeError(
+                    f"request uid={self.queue[0].uid} can never be admitted "
+                    f"(prompt too long for max_len, or needs more KV frames "
+                    f"than the pool holds)")
             inflight = list({id(r): r for r in inflight + before}.values())
             self.engine.step()
             for r in inflight:
-                if r.done and r not in self.completed:
+                if r.done and id(r) not in self._completed_ids:
+                    self._completed_ids.add(id(r))
                     self.completed.append(r)
             steps += 1
             if steps > max_steps:

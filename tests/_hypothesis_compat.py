@@ -1,0 +1,74 @@
+"""Minimal stand-in for the tiny slice of hypothesis the tests use.
+
+The container may not ship ``hypothesis``; rather than skipping the property
+tests, this shim executes them over ``max_examples`` seeded-random samples.
+It implements only what the suite needs: ``given``, ``settings``, and the
+``integers`` / ``lists`` / ``permutations`` strategies.  Real hypothesis is
+preferred when importable (see the try/except at the import sites) -- it
+shrinks counterexamples; this shim just reproduces deterministically.
+"""
+from __future__ import annotations
+
+
+import random
+
+
+class _Strategy:
+    def __init__(self, gen):
+        self.gen = gen          # callable(random.Random) -> value
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          unique: bool = False) -> _Strategy:
+    def gen(r: random.Random):
+        n = r.randint(min_size, max_size)
+        if not unique:
+            return [elements.gen(r) for _ in range(n)]
+        seen: set = set()
+        out = []
+        tries = 0
+        while len(out) < n and tries < 10_000:
+            v = elements.gen(r)
+            tries += 1
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        return out
+    return _Strategy(gen)
+
+
+def permutations(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda r: r.sample(seq, len(seq)))
+
+
+class strategies:
+    integers = staticmethod(integers)
+    lists = staticmethod(lists)
+    permutations = staticmethod(permutations)
+
+
+def settings(max_examples: int = 20, deadline=None):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # no functools.wraps: pytest would introspect the wrapped signature
+        # (via __wrapped__) and treat the generated arguments as fixtures
+        def wrapper():
+            rng = random.Random(0)
+            for _ in range(getattr(wrapper, "_max_examples", 20)):
+                fn(*[s.gen(rng) for s in strats])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -18,6 +18,7 @@ def run_with_devices(body: str, n_devices: int = 8) -> str:
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import compat_make_mesh as make_mesh
         """) + textwrap.dedent(body)
     env = dict(os.environ, PYTHONPATH=SRC)
     env.pop("XLA_FLAGS", None)
@@ -31,8 +32,7 @@ def test_emem_distributed_read_write():
     out = run_with_devices("""
         from repro.core import emem
         spec = emem.EMemSpec(n_slots=1024, width=4, page_slots=16, n_shards=8)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         data = jax.device_put(emem.create(spec),
                               emem.sharding_for(spec, mesh, ("data",)))
         rng = np.random.default_rng(0)
@@ -58,8 +58,7 @@ def test_paged_decode_matches_batch_on_mesh():
                           n_heads=8, n_kv_heads=2, head_dim=16, d_ff=128,
                           vocab_size=128, kv_layout="paged", kv_page_slots=4,
                           param_dtype="float32", compute_dtype="float32")
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         mesh_ctx.set_context(mesh, batch_axes=("data",), tp_axis="model",
                              kv_axes=("data",))
         model = Model(cfg)
@@ -104,8 +103,7 @@ def test_sharded_training_matches_single_device():
         for shape, axes in [((8, 1), ("data", "model")),
                             ((4, 2), ("data", "model")),
                             ((1, 1), ("data", "model"))]:
-            mesh = jax.make_mesh(shape, axes,
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = make_mesh(shape, axes)
             tr = Trainer(model, mesh, AdamWConfig(lr=1e-3))
             params, opt = tr.init_state(seed=0)
             params, opt, hist = tr.run(params, opt, iter(data), 3)
@@ -122,14 +120,12 @@ def test_elastic_restore_across_meshes(tmp_path):
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.train.checkpoint import CheckpointManager
         ckpt = CheckpointManager({str(tmp_path)!r}, async_save=False)
-        mesh8 = jax.make_mesh((8,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        mesh8 = make_mesh((8,), ("data",))
         w = jax.device_put(jnp.arange(64.0).reshape(8, 8),
                            NamedSharding(mesh8, P("data")))
         ckpt.save(1, {{"w": w}})
         # restore onto a 4-device mesh (elastic scale-down)
-        mesh4 = jax.make_mesh((4,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        mesh4 = make_mesh((4,), ("data",))
         sh = {{"w": NamedSharding(mesh4, P("data"))}}
         restored, step = ckpt.restore({{"w": w}}, shardings=sh)
         assert step == 1
@@ -139,3 +135,147 @@ def test_elastic_restore_across_meshes(tmp_path):
         print("ELASTIC_OK")
     """)
     assert "ELASTIC_OK" in out
+
+
+def test_emem_layout_roundtrip_and_overflow_on_meshes():
+    """Sharded layout conversion round-trips, and overflowed requests
+    (capacity_factor < 1) read back zeros exactly where _plan.valid is
+    False, on 1/2/4/8-device meshes."""
+    out = run_with_devices("""
+        import functools
+        from repro.core import emem
+        rng = np.random.default_rng(0)
+        for shards in (1, 2, 4, 8):
+            spec = emem.EMemSpec(n_slots=1024, width=4, page_slots=16,
+                                 n_shards=shards)
+            mesh = make_mesh((shards,), ("data",))
+            sh = emem.sharding_for(spec, mesh, ("data",))
+            # round-trip through the physical (device) layout
+            logical = jnp.asarray(
+                rng.normal(size=spec.global_shape()).astype(np.float32))
+            phys = jax.device_put(emem.from_logical(spec, logical), sh)
+            back = emem.to_logical(spec, phys)
+            assert np.allclose(np.asarray(back), np.asarray(logical)), shards
+            # overflow: tight capacity drops exactly the invalid requests
+            data = jax.device_put(emem.from_logical(spec, logical), sh)
+            addrs = jnp.asarray(rng.integers(0, 1024, 128).astype(np.int32))
+            cf = 0.5
+            got = np.asarray(emem.read(spec, mesh, ("data",), data, addrs, cf))
+            r_shard = 128 // shards
+            cap = emem.capacity_for(spec, r_shard, cf)
+            flat = np.asarray(logical).reshape(1024, 4)
+            for s in range(shards):
+                chunk = addrs[s * r_shard:(s + 1) * r_shard]
+                valid = np.asarray(emem._plan(spec, chunk, cap).valid)
+                if shards == 1:          # single-shard fast path never drops
+                    valid = np.ones_like(valid)
+                expect = np.where(valid[:, None], flat[np.asarray(chunk)], 0.0)
+                assert np.allclose(got[s * r_shard:(s + 1) * r_shard],
+                                   expect), (shards, s)
+                if shards > 1:
+                    assert not valid.all(), "cf=0.5 should overflow"
+            print("LAYOUT_OK", shards)
+        print("ALL_LAYOUT_OK")
+    """)
+    assert "ALL_LAYOUT_OK" in out
+
+
+def test_emem_vm_matches_oracle_on_meshes():
+    """EMemVM vread/vwrite match the translated read_ref/write_ref oracle on
+    1/2/4/8-device meshes, cache enabled and disabled, incl. after
+    free+realloc remapping."""
+    out = run_with_devices("""
+        from repro.core import emem
+        from repro.emem_vm import EMemVM, VMConfig
+        for shards in (1, 2, 4, 8):
+            spec = emem.EMemSpec(n_slots=1024, width=4, page_slots=16,
+                                 n_shards=shards)
+            mesh = None if shards == 1 else make_mesh((shards,), ("data",))
+            for sets in (0, 4):
+                cfg = VMConfig(spec=spec, n_vpages=48, cache_sets=sets)
+                vm = EMemVM(cfg, mesh=mesh, axes=("data",))
+                vm.map_range(0, 24)
+                rng = np.random.default_rng(shards * 10 + sets)
+                mirror = np.zeros((1024, 4), np.float32)   # physical slots
+                def xlate(addrs):
+                    ps = 16
+                    phys = np.zeros(len(addrs), np.int64)
+                    ok = np.zeros(len(addrs), bool)
+                    for i, a in enumerate(addrs):
+                        vp = a // ps
+                        if vp < 48 and vm.page_table.is_mapped(vp):
+                            phys[i] = vm.page_table.frame_of(vp) * ps + a % ps
+                            ok[i] = True
+                    return phys, ok
+                def roundtrip(n_rounds):
+                    for _ in range(n_rounds):
+                        addrs = rng.choice(48 * 16, 64,
+                                           replace=False).astype(np.int32)
+                        vals = rng.normal(size=(64, 4)).astype(np.float32)
+                        phys, ok = xlate(addrs)
+                        vm.vwrite(jnp.asarray(addrs), jnp.asarray(vals))
+                        mirror[phys[ok]] = vals[ok]
+                        got = np.asarray(vm.vread(jnp.asarray(addrs)))
+                        expect = np.where(ok[:, None], mirror[phys], 0.0)
+                        assert np.allclose(got, expect, atol=1e-6), \\
+                            (shards, sets)
+                roundtrip(2)
+                for vp in range(0, 24, 2):
+                    vm.unmap_page(vp)
+                vm.map_range(30, 10)       # recycle freed frames
+                roundtrip(2)
+                print("VM_OK", shards, sets, vm.counters())
+        print("ALL_VM_OK")
+    """)
+    assert "ALL_VM_OK" in out
+
+
+def test_pooled_decode_matches_batch_on_mesh():
+    """kv_layout="pooled" with scattered frame assignments matches the
+    batch-layout reference on a (4 kv) x (2 tp) mesh."""
+    out = run_with_devices("""
+        import dataclasses
+        from repro.models import Model, ModelConfig
+        from repro.parallel import mesh_ctx
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                          n_heads=8, n_kv_heads=2, head_dim=16, d_ff=128,
+                          vocab_size=128, kv_layout="pooled", kv_page_slots=4,
+                          kv_pool_pages=16, param_dtype="float32",
+                          compute_dtype="float32")
+        mesh = make_mesh((4, 2), ("data", "model"))
+        mesh_ctx.set_context(mesh, batch_axes=("data",), tp_axis="model",
+                             kv_axes=("data",))
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        B, S = 2, 8
+        toks = jnp.asarray(rng.integers(0, 128, (B, S)))
+        cache = model.init_cache(B, 16)
+        # host-managed tables with deliberately scattered frames
+        bt = np.full((B, 4), -1, np.int32)
+        fo = np.full(16, -1, np.int32); fl = np.zeros(16, np.int32)
+        alloc = iter([5, 2, 11, 7, 3, 13, 1, 9])
+        lengths = jnp.zeros((B,), jnp.int32)
+        for t in range(S):
+            lengths = lengths + 1
+            for b in range(B):
+                lp = t // 4
+                if bt[b, lp] < 0:
+                    f = next(alloc); bt[b, lp] = f; fo[f] = b; fl[f] = lp
+            cache["vm"] = {"block_table": jnp.array(bt),
+                           "frame_owner": jnp.array(fo),
+                           "frame_lpage": jnp.array(fl)}
+            logits_p, cache = model.decode_step(params, toks[:, t:t+1],
+                                                cache, lengths)
+            jax.block_until_ready(logits_p)
+        mesh_ctx.clear_context()
+        cfg_b = dataclasses.replace(cfg, kv_layout="batch")
+        mb = Model(cfg_b)
+        _, cache_b = mb.prefill(params, {"tokens": toks[:, :-1]}, max_len=16)
+        logits_b, _ = mb.decode_step(params, toks[:, -1:], cache_b,
+                                     jnp.full((B,), S, jnp.int32))
+        err = float(jnp.max(jnp.abs(logits_p[:, :128] - logits_b[:, :128])))
+        assert err < 1e-3, err
+        print("POOLED_MESH_OK", err)
+    """)
+    assert "POOLED_MESH_OK" in out

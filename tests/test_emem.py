@@ -2,7 +2,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container without hypothesis
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import emem
 
@@ -102,6 +106,47 @@ def test_property_read_permutation_invariant(perm):
     out = emem.read_ref(spec, mem, base)
     out_p = emem.read_ref(spec, mem, base[p])
     np.testing.assert_allclose(np.asarray(out)[p], np.asarray(out_p))
+
+
+@pytest.mark.parametrize("n_shards,page_slots", [(1, 8), (2, 16), (4, 16),
+                                                 (8, 8), (4, 32), (8, 64)])
+def test_layout_roundtrip_combos(n_shards, page_slots):
+    """from_logical(to_logical(x)) == x (and the converse) for a grid of
+    (n_shards, page_slots) -- the permutation must be a bijection."""
+    spec = emem.EMemSpec(n_slots=1024, width=2, page_slots=page_slots,
+                         n_shards=n_shards)
+    rng = np.random.default_rng(page_slots * n_shards)
+    data = jnp.asarray(rng.normal(size=spec.global_shape()).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(emem.from_logical(spec, emem.to_logical(spec, data))),
+        np.asarray(data))
+    np.testing.assert_array_equal(
+        np.asarray(emem.to_logical(spec, emem.from_logical(spec, data))),
+        np.asarray(data))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_dispatch_plan_overflow(seed):
+    """_plan drops exactly the requests beyond per-queue capacity: ``valid``
+    marks the first ``capacity`` requests per owner in arrival order, and
+    ``send_addr`` holds exactly the valid requests' local slots."""
+    spec = make_spec()
+    rng = np.random.default_rng(seed)
+    addrs = jnp.asarray(rng.integers(0, spec.n_slots, 64).astype(np.int32))
+    capacity = int(rng.integers(1, 17))
+    d = emem._plan(spec, addrs, capacity)
+    owners = np.asarray(d.owners)
+    valid = np.asarray(d.valid)
+    # arrival-order position within each owner queue
+    seen: dict[int, int] = {}
+    for i, o in enumerate(owners):
+        pos = seen.get(int(o), 0)
+        assert valid[i] == (pos < capacity), (i, pos, capacity)
+        seen[int(o)] = pos + 1
+    send = np.asarray(d.send_addr)
+    local = np.asarray(spec.local_slot_of(addrs))
+    assert sorted(send[send >= 0]) == sorted(local[valid])
 
 
 def test_dispatch_stats_no_overflow_with_full_capacity():

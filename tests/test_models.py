@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container without hypothesis
+    from _hypothesis_compat import given, settings, strategies as st
 
 from conftest import tiny_dense_cfg
 from repro.models import Model, ModelConfig
@@ -169,6 +173,150 @@ def test_serve_engine_matches_manual_decode(rng):
     while engine.slot_req[0] is not None:
         engine.step()
     assert req.done and len(req.output) == 3
+
+
+def test_serve_engine_empty_prompt(rng):
+    """Regression: admit() used to crash (unbound ``logits``) on an empty
+    prompt; now an implicit BOS produces the first logits."""
+    from repro.serve import EngineConfig, Request, ServeEngine
+    cfg = tiny_dense_cfg(vocab_size=64)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, EngineConfig(slots=2, max_len=16))
+    req = Request(uid=0, prompt=np.zeros(0, np.int32), max_new_tokens=3)
+    engine.admit(req, 0)
+    while engine.slot_req[0] is not None:
+        engine.step()
+    assert req.done and len(req.output) == 3
+    assert all(0 <= t < 64 for t in req.output)
+
+
+def _pooled_cfg(pool_pages=None, layout="pooled"):
+    return tiny_dense_cfg(vocab_size=64, kv_layout=layout, kv_page_slots=4,
+                          kv_pool_pages=pool_pages)
+
+
+def test_serve_pooled_matches_fixed_paged(rng):
+    """kv_layout="pooled" is token-identical to the fixed paged layout."""
+    from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+    prompts = [rng.integers(0, 64, int(rng.integers(2, 7))).astype(np.int32)
+               for _ in range(5)]
+    outs = {}
+    for layout in ("paged", "pooled"):
+        cfg = _pooled_cfg(pool_pages=16 if layout == "pooled" else None,
+                          layout=layout)
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        engine = ServeEngine(model, params, EngineConfig(slots=2, max_len=32))
+        sched = Scheduler(engine)
+        sched.submit([Request(uid=i, prompt=p, max_new_tokens=4)
+                      for i, p in enumerate(prompts)])
+        done = sched.run()
+        outs[layout] = {r.uid: tuple(r.output) for r in done}
+        if layout == "pooled":
+            assert engine.pool_stats()["used"] == 0   # all frames released
+    assert outs["paged"] == outs["pooled"]
+
+
+def test_serve_pooled_oversubscribes_fixed_reservation(rng):
+    """With the KV byte budget that caps the fixed layout at 2 slots, the
+    pooled engine admits strictly more concurrent short requests."""
+    from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+    fixed_slots, max_len = 2, 32
+    cfg = _pooled_cfg(pool_pages=fixed_slots * (max_len // 4))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, EngineConfig(slots=6, max_len=max_len))
+    sched = Scheduler(engine)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 64, 3).astype(np.int32),
+                    max_new_tokens=4) for i in range(6)]
+    sched.submit(reqs)
+    sched._admit_waiting()
+    concurrent = sum(r is not None for r in engine.slot_req)
+    assert concurrent > fixed_slots, concurrent
+    done = sched.run()
+    assert len(done) == 6 and all(len(r.output) == 4 for r in done)
+    assert engine.pool_stats()["used"] == 0
+
+
+def test_serve_pooled_rejects_oversized_request(rng):
+    """A request needing more frames than the pool holds can never be
+    admitted; the scheduler surfaces that instead of spinning."""
+    from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+    cfg = _pooled_cfg(pool_pages=2)      # 8 token positions total
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, EngineConfig(slots=2, max_len=32))
+    sched = Scheduler(engine)
+    big = Request(uid=0, prompt=rng.integers(0, 64, 12).astype(np.int32),
+                  max_new_tokens=8)
+    sched.submit([big])
+    with pytest.raises(RuntimeError, match="never be admitted"):
+        sched.run()
+
+
+@pytest.mark.parametrize("layout", ["batch", "paged", "pooled"])
+def test_admit_does_not_corrupt_inflight_slots(rng, layout):
+    """Admitting B mid-flight must not change A's output: decode runs the
+    full batch, so prefill writes must be masked to the admitted slot."""
+    from repro.serve import EngineConfig, Request, ServeEngine
+    cfg = tiny_dense_cfg(vocab_size=64) if layout == "batch" else \
+        _pooled_cfg(pool_pages=16 if layout == "pooled" else None,
+                    layout=layout)
+    pa = rng.integers(0, 64, 5).astype(np.int32)
+    pb = rng.integers(0, 64, 6).astype(np.int32)
+
+    def run(admit_b):
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        engine = ServeEngine(model, params, EngineConfig(slots=2, max_len=32))
+        ra = Request(uid=0, prompt=pa, max_new_tokens=6)
+        engine.admit(ra, 0)
+        engine.step()
+        engine.step()
+        if admit_b:
+            engine.admit(Request(uid=1, prompt=pb, max_new_tokens=2), 1)
+        while engine.slot_req[0] is not None:
+            engine.step()
+        return ra.output
+
+    assert run(admit_b=False) == run(admit_b=True), layout
+
+
+def test_oversized_prompt_rejected(rng):
+    """A prompt with no room to generate under max_len is rejected up front
+    (previously: pooled crashed mid-prefill leaking the slot + frames)."""
+    from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+    for cfg in (tiny_dense_cfg(vocab_size=64), _pooled_cfg(pool_pages=64)):
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        engine = ServeEngine(model, params, EngineConfig(slots=2, max_len=16))
+        big = Request(uid=0, prompt=rng.integers(0, 64, 20).astype(np.int32),
+                      max_new_tokens=4)
+        assert not engine.can_admit(big)
+        with pytest.raises(RuntimeError, match="inadmissible"):
+            engine.admit(big, 0)
+        assert engine.slot_req[0] is None          # no state leaked
+        if engine.pooled:
+            assert engine.allocator.free_count() == engine.n_frames
+        sched = Scheduler(engine)
+        sched.submit([big])
+        with pytest.raises(RuntimeError, match="never be admitted"):
+            sched.run()
+
+
+def test_scheduler_completes_duplicate_uids(rng):
+    from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+    cfg = tiny_dense_cfg(vocab_size=64)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, EngineConfig(slots=2, max_len=32))
+    sched = Scheduler(engine)
+    reqs = [Request(uid=7, prompt=rng.integers(0, 64, 4).astype(np.int32),
+                    max_new_tokens=3) for _ in range(2)]
+    sched.submit(reqs)
+    done = sched.run()
+    assert len(done) == 2 and all(len(r.output) == 3 for r in done)
 
 
 def test_moe_sorted_dispatch_equals_scatter(rng):

@@ -95,6 +95,27 @@ def test_mix_sweep_monotone_and_converging():
     assert 1.5 <= clos[-1] <= 2.8
 
 
+# -- emem_vm extension: cache-aware access model -------------------------------
+def test_cache_sweep_monotone_improvement():
+    """Slowdown improves monotonically with hot-page cache size under the
+    DHRYSTONE mix, and a zero-size cache reproduces the uncached model."""
+    out = emulation.fig_cache_sweep(1024, mix=emulation.DHRYSTONE)
+    for net in ("clos", "mesh"):
+        vals = out[net]
+        assert all(b <= a + 1e-9 for a, b in zip(vals, vals[1:])), (net, vals)
+        assert vals[0] == pytest.approx(
+            emulation.slowdown(emulation.DHRYSTONE, net, 1024, 1024))
+        assert vals[-1] < 0.75 * vals[0]          # big cache: real win
+    hr = out["hit_rate"]
+    assert hr[0] == 0.0 and all(b >= a for a, b in zip(hr, hr[1:]))
+
+
+def test_cache_hit_rate_model_bounds():
+    assert emulation.CacheConfig(0.0).hit_rate() == 0.0
+    assert emulation.CacheConfig(64.0).hit_rate() == pytest.approx(0.5)
+    assert 0.99 < emulation.CacheConfig(1e6).hit_rate() < 1.0
+
+
 # -- §7.3: binary size ---------------------------------------------------------
 def test_load_store_expansion_constants():
     assert emulation.LOAD_EXTRA_INSTRS == 2
