@@ -1,11 +1,17 @@
 """EMemVM microbenchmark: virtual read/write throughput, cache hit rate,
-and pooled-vs-fixed serving slot utilization.
+pooled-vs-fixed slot utilization, and the shared-prefix serving workload
+(N requests x one system prompt through the real engine + BlockManager).
 
 Also consolidates the results into ``BENCH_vm.json`` at the repo root so the
 perf trajectory of the virtual-memory subsystem is tracked PR over PR.
+
+``python -m benchmarks.vm_bench --smoke`` runs a tiny (<30 s) configuration
+suitable for CI: allocator / engine regressions show up as benchmark
+crashes (leak-detector shutdown included), not just test failures.
 """
 from __future__ import annotations
 
+import argparse
 import functools
 import json
 import os
@@ -14,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import print_csv, row, timeit
 from repro.core import emem
 from repro.emem_vm import EMemVM, VMConfig
 from repro.emem_vm import vm as vm_mod
@@ -22,10 +28,13 @@ from repro.emem_vm import vm as vm_mod
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_vm.json")
 
 
-def _throughput_rows(record: dict) -> list[dict]:
+def _throughput_rows(record: dict, smoke: bool = False) -> list[dict]:
     out = []
     rng = np.random.default_rng(0)
-    n_slots, width, page_slots, n_requests = 1 << 14, 64, 128, 4096
+    if smoke:
+        n_slots, width, page_slots, n_requests = 1 << 10, 16, 32, 256
+    else:
+        n_slots, width, page_slots, n_requests = 1 << 14, 64, 128, 4096
     spec = emem.EMemSpec(n_slots=n_slots, width=width, page_slots=page_slots,
                          n_shards=1)
     for sets in (0, 16):
@@ -77,7 +86,7 @@ def _utilization_rows(record: dict) -> list[dict]:
     Fixed layout: every slot reserves ceil(max_len / page_slots) pages, so
     concurrency == pool_pages / max_pages regardless of sequence length.
     Pooled layout: each request reserves only its own worst case.  Pure
-    admission arithmetic (mirrors ServeEngine.can_admit) -- no model runs.
+    admission arithmetic (mirrors the PR 1 headroom rule) -- no model runs.
     """
     out = []
     max_len, page_slots = 2048, 256
@@ -101,11 +110,127 @@ def _utilization_rows(record: dict) -> list[dict]:
     return out
 
 
-def rows() -> list[dict]:
-    record: dict = {}
-    out = _throughput_rows(record) + _utilization_rows(record)
-    with open(_JSON_PATH, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True)
-        f.write("\n")
-    out.append(row("vm/json", 0.0, "wrote BENCH_vm.json"))
+# ---------------------------------------------------------------------------
+# Shared-prefix serving workload (real engine, BlockManager path)
+# ---------------------------------------------------------------------------
+def _tiny_model():
+    from repro.models import Model, ModelConfig
+    cfg = ModelConfig(name="bench-tiny", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab_size=64, param_dtype="float32",
+                      compute_dtype="float32", attn_chunk_q=16,
+                      attn_chunk_k=16, kv_layout="pooled", kv_page_slots=4,
+                      kv_pool_pages=20)
+    model = Model(cfg)
+    return model, model.init(jax.random.key(0))
+
+
+def _run_prefix_workload(share: bool, prompts, max_new: int, slots: int,
+                         max_len: int):
+    """Drive the scheduler step by step, recording peak concurrency."""
+    from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+    model, params = _tiny_model()
+    engine = ServeEngine(model, params,
+                         EngineConfig(slots=slots, max_len=max_len))
+    engine.blocks.share_prefixes = share
+    sched = Scheduler(engine)
+    sched.submit([Request(uid=i, prompt=p, max_new_tokens=max_new)
+                  for i, p in enumerate(prompts)])
+    peak = 0
+    steps = 0
+    while sched.queue or any(r is not None for r in engine.slot_req):
+        sched._admit_waiting()
+        peak = max(peak, sum(r is not None for r in engine.slot_req))
+        engine.step()
+        sched._requeue_preempted()
+        steps += 1
+        assert steps < 10_000, "prefix workload did not converge"
+    stats = engine.shutdown()            # leak detector: raises on leak
+    return peak, stats
+
+
+def _prefix_rows(record: dict, smoke: bool = False) -> list[dict]:
+    """N requests x one system prompt: admitted concurrency per KV byte.
+
+    Baseline is the PR 1 pooled admission rule at the SAME pool size (equal
+    KV bytes): every request reserves its worst case up front, so
+    concurrency == pool // ceil((prompt+max_new)/page_slots).  The unified
+    BlockManager path shares the system-prompt pages (refcount++) and
+    admits optimistically, preempting on exhaustion -- strictly more
+    concurrent requests from the same frames, token-identically.
+    """
+    from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+    n_req, sys_len, tail_len, max_new = 8, 12, 2, 4
+    page_slots, pool, slots, max_len = 4, 20, 8, 32
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, 64, sys_len).astype(np.int32)
+    prompts = [np.concatenate([system,
+                               rng.integers(0, 64, tail_len).astype(np.int32)])
+               for _ in range(n_req)]
+    plen = sys_len + tail_len
+    worst = -(-(plen + max_new) // page_slots)
+    pr1_concurrent = min(slots, pool // worst)   # PR 1 headroom admission
+
+    def run(share):
+        return _run_prefix_workload(share, prompts, max_new, slots, max_len)
+
+    def outputs(share):
+        model, params = _tiny_model()
+        engine = ServeEngine(model, params,
+                             EngineConfig(slots=slots, max_len=max_len))
+        engine.blocks.share_prefixes = share
+        sched = Scheduler(engine)
+        sched.submit([Request(uid=i, prompt=p, max_new_tokens=max_new)
+                      for i, p in enumerate(prompts)])
+        done = sched.run()
+        engine.shutdown()
+        return {r.uid: tuple(r.output) for r in done}
+
+    peak, stats = run(share=True)
+    ratio = peak / max(pr1_concurrent, 1)
+    # token identity: sharing must not change a single output token
+    assert outputs(True) == outputs(False), \
+        "prefix sharing changed decoded tokens"
+    record["prefix_sharing"] = {
+        "pool_pages": pool, "requests": n_req,
+        "concurrent_shared": peak,
+        "concurrent_pr1_headroom": pr1_concurrent,
+        "concurrency_ratio": round(ratio, 2),
+        "shared_prompt_tokens": stats["shared_prompt_tokens"],
+        "cow_copies": stats["cow_copies"],
+        "preempted": stats["preempted"],
+    }
+    out = [row("vm/prefix/concurrency", 0.0,
+               f"shared={peak}req pr1={pr1_concurrent}req "
+               f"ratio={ratio:.2f}x"),
+           row("vm/prefix/shared_tokens", 0.0,
+               f"{stats['shared_prompt_tokens']} prompt tokens skipped, "
+               f"{stats['cow_copies']} COW copies, "
+               f"{stats['preempted']} preemptions")]
+    assert ratio >= 1.5, (
+        f"shared-prefix concurrency ratio {ratio:.2f} < 1.5x")
     return out
+
+
+def rows(smoke: bool = False) -> list[dict]:
+    record: dict = {}
+    out = (_throughput_rows(record, smoke) + _utilization_rows(record)
+           + _prefix_rows(record, smoke))
+    if not smoke:                        # smoke numbers aren't the tracked ones
+        with open(_JSON_PATH, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+            f.write("\n")
+        out.append(row("vm/json", 0.0, "wrote BENCH_vm.json"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configuration (<30 s) for CI")
+    args = ap.parse_args()
+    print_csv(rows(smoke=args.smoke))
+
+
+if __name__ == "__main__":
+    main()

@@ -75,6 +75,42 @@ class CacheConfig:
         return self.capacity_kb / (self.capacity_kb + self.hot_set_half_kb)
 
 
+def fit_hot_set_kb(traces) -> float:
+    """Fit :attr:`CacheConfig.hot_set_half_kb` from measured cache traces.
+
+    ``traces`` is an iterable of dicts, each pairing a cache capacity with
+    the hit/miss counters measured at that capacity -- i.e.
+    ``{**EMemVM.counters(), "capacity_kb": <cache size>}`` (``hit_rate`` is
+    used directly when ``hits``/``misses`` are absent).
+
+    The working-set model is ``h = C / (C + C_half)``, so each trace gives
+    a point estimate ``C_half = C * (1 - h) / h``; the fit is the
+    access-count-weighted average of the point estimates (least squares in
+    ``C_half`` under per-access noise).  Traces with h == 0 carry no finite
+    estimate and are skipped; with no usable trace the 64 KB default is
+    returned.
+    """
+    default = CacheConfig.__dataclass_fields__["hot_set_half_kb"].default
+    num = den = 0.0
+    for tr in traces:
+        cap = float(tr["capacity_kb"])
+        if cap <= 0.0:
+            continue
+        if "hits" in tr or "misses" in tr:
+            hits = float(tr.get("hits", 0))
+            total = hits + float(tr.get("misses", 0))
+            if total <= 0:
+                continue
+            h, weight = hits / total, total
+        else:
+            h, weight = float(tr["hit_rate"]), 1.0
+        if h <= 0.0:
+            continue                     # C_half estimate is unbounded
+        num += weight * cap * (1.0 - h) / h
+        den += weight
+    return num / den if den else default
+
+
 def synthetic_mix(global_frac: float, local_frac: float = 0.20) -> InstructionMix:
     """Synthetic sequences with a swept global fraction (Fig. 11)."""
     return InstructionMix(f"synthetic-g{global_frac:.2f}",

@@ -14,9 +14,13 @@ package adds the indirection that turns the emulation into a memory *system*:
     shapes throughout so every operation jits;
   * :mod:`repro.emem_vm.vm`          -- the :class:`EMemVM` facade exposing
     ``vread``/``vwrite`` that translate through the page table, consult the
-    cache, and fall through to ``emem.read``/``emem.write`` on miss.
+    cache, and fall through to ``emem.read``/``emem.write`` on miss;
+  * :mod:`repro.emem_vm.block_manager` -- refcounted sequence-level frame
+    ownership (logical->frame block tables, prefix sharing, copy-on-write,
+    reserved vs on-demand allocation policies) for the serving engine.
 """
-from repro.emem_vm.allocator import FrameAllocator  # noqa: F401
+from repro.emem_vm.allocator import FrameAllocator, OutOfFrames  # noqa: F401
+from repro.emem_vm.block_manager import BlockManager, CowCopy  # noqa: F401
 from repro.emem_vm.cache import CacheSpec, HotPageCache  # noqa: F401
 from repro.emem_vm.page_table import PROT_NONE, PROT_R, PROT_RW, PROT_W  # noqa: F401
 from repro.emem_vm.page_table import PageTable  # noqa: F401

@@ -1,10 +1,19 @@
-"""Free-list frame allocator over the EMem physical page pool.
+"""Refcounted free-list frame allocator over the EMem physical page pool.
 
 Allocation is a control-plane operation (it happens at request admission /
 completion on the host, never inside a jitted step), so the allocator is
 plain Python over numpy -- the data plane only ever sees the frame indices
 it hands out.  LIFO free-list: recently freed frames are reused first, which
 keeps the hot-page cache warm across free+realloc churn.
+
+Every live frame carries a *reference count*: ``alloc`` hands out a frame at
+refcount 1, ``ref`` adds an owner (prefix sharing -- the same physical frame
+backs a common prompt prefix of several sequences), and ``free``/``deref``
+drops one owner, returning the frame to the free list only when the last
+owner lets go.  A frame with refcount > 1 is *shared* and must be treated as
+read-only by its owners (copy-on-write is the BlockManager's job).  A
+``free`` of an already-free frame raises -- a double free would push the
+same frame onto the free list twice and hand it to two owners.
 """
 from __future__ import annotations
 
@@ -19,21 +28,21 @@ class OutOfFrames(RuntimeError):
 
 @dataclasses.dataclass
 class FrameAllocator:
-    """LIFO free-list over physical frames ``[0, n_frames)``."""
+    """LIFO free-list with per-frame refcounts over frames ``[0, n_frames)``."""
     n_frames: int
 
     def __post_init__(self):
         if self.n_frames <= 0:
             raise ValueError("n_frames must be positive")
         self._free: list[int] = list(range(self.n_frames - 1, -1, -1))
-        self._allocated = np.zeros(self.n_frames, bool)
+        self._refs = np.zeros(self.n_frames, np.int32)
 
-    # -- alloc / free ---------------------------------------------------------
+    # -- alloc / ref / free ---------------------------------------------------
     def alloc(self) -> int:
         if not self._free:
             raise OutOfFrames(f"all {self.n_frames} frames allocated")
         f = self._free.pop()
-        self._allocated[f] = True
+        self._refs[f] = 1
         return f
 
     def bulk_alloc(self, n: int) -> list[int]:
@@ -42,17 +51,42 @@ class FrameAllocator:
                 f"requested {n} frames, only {len(self._free)} free")
         return [self.alloc() for _ in range(n)]
 
+    def ref(self, frame: int) -> int:
+        """Add an owner to a live frame; returns the new refcount."""
+        self._check_range(frame)
+        if self._refs[frame] <= 0:
+            raise ValueError(f"ref of free frame {frame}")
+        self._refs[frame] += 1
+        return int(self._refs[frame])
+
+    def refcount(self, frame: int) -> int:
+        self._check_range(frame)
+        return int(self._refs[frame])
+
+    def is_shared(self, frame: int) -> bool:
+        return self.refcount(frame) > 1
+
     def free(self, frame: int) -> None:
-        if not (0 <= frame < self.n_frames):
-            raise ValueError(f"frame {frame} out of range")
-        if not self._allocated[frame]:
+        """Drop one reference; the frame returns to the free list only when
+        the last owner drops it.  Freeing an already-free frame raises (a
+        double free would hand the same frame to two owners)."""
+        self._check_range(frame)
+        if self._refs[frame] <= 0:
             raise ValueError(f"double free of frame {frame}")
-        self._allocated[frame] = False
-        self._free.append(frame)
+        self._refs[frame] -= 1
+        if self._refs[frame] == 0:
+            self._free.append(frame)
+
+    #: ``deref`` is the refcount-flavored name for the same operation.
+    deref = free
 
     def bulk_free(self, frames) -> None:
         for f in frames:
             self.free(int(f))
+
+    def _check_range(self, frame: int) -> None:
+        if not (0 <= frame < self.n_frames):
+            raise ValueError(f"frame {frame} out of range")
 
     # -- stats ----------------------------------------------------------------
     def free_count(self) -> int:
@@ -60,6 +94,14 @@ class FrameAllocator:
 
     def used_count(self) -> int:
         return self.n_frames - len(self._free)
+
+    def shared_count(self) -> int:
+        """Frames currently owned by more than one sequence."""
+        return int((self._refs > 1).sum())
+
+    def shared_mask(self) -> np.ndarray:
+        """Boolean [n_frames]: refcount > 1 (read-only to every owner)."""
+        return self._refs > 1
 
     def occupancy(self) -> float:
         return self.used_count() / self.n_frames
@@ -74,7 +116,7 @@ class FrameAllocator:
         n_free = len(self._free)
         if n_free == 0:
             return 0.0
-        free_mask = ~self._allocated
+        free_mask = self._refs == 0
         best = run = 0
         for bit in free_mask:
             run = run + 1 if bit else 0
@@ -86,6 +128,7 @@ class FrameAllocator:
             "n_frames": self.n_frames,
             "free": self.free_count(),
             "used": self.used_count(),
+            "shared": self.shared_count(),
             "occupancy": self.occupancy(),
             "fragmentation": self.fragmentation(),
         }

@@ -1,0 +1,230 @@
+"""BlockManager: refcounted ownership of KV frames for every sequence.
+
+The third layer of the memory stack.  :mod:`repro.core.emem` is the
+*physical* emulation (address -> owner is arithmetic), :mod:`repro.emem_vm`
+adds *virtual* addressing (page table + allocator + hot-page cache), and
+this module owns the *sequence* level: which logical page of which sequence
+lives in which physical frame, and who else is allowed to read it.
+
+Every serving sequence -- whatever the engine's ``kv_layout`` -- goes
+through one logical->frame block table here.  The two layouts are just
+allocation policies:
+
+  * ``policy="reserved"`` (``kv_layout="paged"``): every sequence slot
+    permanently owns ``max_lpages`` frames, assigned once at construction.
+    Admission never allocates, completion never frees; the table is static
+    and reproduces the fixed slots x max_pages layout exactly.
+  * ``policy="on_demand"`` (``kv_layout="pooled"``): frames come from the
+    shared pool as a sequence grows and return when it completes.  On top
+    of the indirection this policy implements the two ROADMAP items that
+    need per-frame refcounts:
+
+      - **prefix sharing**: admission matches the new prompt against the
+        prompts of live sequences; pages fully or partially covered by the
+        longest common prefix are *shared* (refcount++) instead of
+        recomputed, and prefill resumes after the shared tokens;
+      - **copy-on-write**: the first write a sequence makes at a position
+        not covered by its shared prefix, into a frame someone else still
+        references, allocates a private frame and copies the page
+        (`CowCopy` records tell the engine which device pages to copy).
+
+Shared frames are read-only to every owner: ``frame_ro()`` exports the
+refcount>1 bit, which rides in ``cache["vm"]`` into the paged-attention
+kernel where writes to shared frames are dropped (defense in depth -- the
+engine resolves COW host-side *before* the decode step that writes).
+
+All state is host-side numpy (control plane); the data plane only ever sees
+the exported tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.emem_vm.allocator import FrameAllocator, OutOfFrames  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class CowCopy:
+    """Device-side page copy the engine must apply: frame ``src`` -> ``dst``
+    (every attention layer's k_pages/v_pages row)."""
+    src: int
+    dst: int
+
+
+class BlockManager:
+    def __init__(self, n_frames: int, n_seqs: int, max_lpages: int,
+                 page_slots: int, policy: str = "on_demand",
+                 share_prefixes: bool = False):
+        if policy not in ("reserved", "on_demand"):
+            raise ValueError(f"unknown policy {policy!r}")
+        if policy == "reserved" and n_frames < n_seqs * max_lpages:
+            raise ValueError(
+                f"reserved policy needs {n_seqs * max_lpages} frames, "
+                f"pool has {n_frames}")
+        self.n_frames = n_frames
+        self.n_seqs = n_seqs
+        self.max_lpages = max_lpages
+        self.page_slots = page_slots
+        self.policy = policy
+        self.share_prefixes = share_prefixes and policy == "on_demand"
+        self.allocator = FrameAllocator(n_frames)
+        self.block_table = np.full((n_seqs, max_lpages), -1, np.int32)
+        self.frame_lpage = np.zeros(n_frames, np.int32)
+        #: positions < shared_len[seq] are backed by valid shared prefix KV
+        #: (writes there are idempotent re-runs and may be dropped)
+        self.shared_len = np.zeros(n_seqs, np.int64)
+        self._prompts: dict[int, np.ndarray] = {}   # live seq -> prompt toks
+        self.counters = {"cow_copies": 0, "shared_frames": 0,
+                         "shared_tokens": 0, "allocs": 0, "frees": 0}
+        #: set whenever the exported tables changed; the engine reads it to
+        #: decide when to re-push ``cache["vm"]`` (and clears it after)
+        self.dirty = True
+        if policy == "reserved":
+            for s in range(n_seqs):
+                for lp in range(max_lpages):
+                    f = self.allocator.alloc()
+                    self.block_table[s, lp] = f
+                    self.frame_lpage[f] = lp
+
+    # -- admission accounting -------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.page_slots)
+
+    def _match_prefix(self, tokens: np.ndarray) -> tuple[int, int]:
+        """Longest common prefix with a live sequence's prompt.
+
+        Returns (match_len, donor_seq); (0, -1) when sharing is off or
+        nothing matches."""
+        if not self.share_prefixes or len(tokens) == 0:
+            return 0, -1
+        best, donor = 0, -1
+        for seq, p in self._prompts.items():
+            m = min(len(p), len(tokens))
+            if m <= best:
+                continue
+            eq = p[:m] == tokens[:m]
+            common = m if eq.all() else int(np.argmin(eq))
+            if common > best:
+                best, donor = common, seq
+        return best, donor
+
+    def admit_frames_needed(self, tokens: np.ndarray) -> int:
+        """Frames the prefill of ``tokens`` will allocate (after sharing)."""
+        if self.policy == "reserved":
+            return 0
+        n = max(len(tokens), 1)
+        match, _ = self._match_prefix(np.asarray(tokens))
+        if n <= match:
+            return 0                    # whole prompt shared: re-run only
+        return self.pages_for(n) - match // self.page_slots
+
+    def can_admit(self, tokens: np.ndarray) -> bool:
+        return (self.admit_frames_needed(tokens)
+                <= self.allocator.free_count())
+
+    # -- sequence lifecycle ---------------------------------------------------
+    def begin_seq(self, seq: int, tokens: np.ndarray) -> int:
+        """Register ``seq`` with prompt ``tokens``; share any common-prefix
+        frames with a live donor.  Returns the number of leading prompt
+        tokens whose KV is already present (prefill may resume after them).
+        """
+        tokens = np.asarray(tokens, np.int32).ravel()
+        if self.policy == "reserved":
+            self.shared_len[seq] = 0
+            return 0
+        self.dirty = True
+        assert (self.block_table[seq] < 0).all(), f"seq {seq} already mapped"
+        match, donor = self._match_prefix(tokens)
+        ps = self.page_slots
+        n_pages = match // ps + (1 if match % ps else 0)
+        for lp in range(n_pages):
+            f = int(self.block_table[donor, lp])
+            assert f >= 0, (donor, lp)
+            self.allocator.ref(f)
+            self.block_table[seq, lp] = f
+            self.counters["shared_frames"] += 1
+        self.shared_len[seq] = match
+        self.counters["shared_tokens"] += match
+        if self.share_prefixes:
+            self._prompts[seq] = tokens.copy()
+        return match
+
+    def ensure_writable(self, seq: int, pos: int) -> list[CowCopy]:
+        """Make position ``pos`` of ``seq`` backed by a writable frame.
+
+        Allocates the frame if the logical page is unmapped; copy-on-writes
+        it if the page is shared and ``pos`` diverges from the shared prefix
+        (first divergent write).  May raise :class:`OutOfFrames` -- state is
+        untouched in that case so the caller can preempt and retry.  Returns
+        the device page copies the caller must apply before decoding.
+        """
+        lp = pos // self.page_slots
+        assert 0 <= lp < self.max_lpages, (seq, pos, lp)
+        f = int(self.block_table[seq, lp])
+        if f < 0:
+            nf = self.allocator.alloc()
+            self.counters["allocs"] += 1
+            self.block_table[seq, lp] = nf
+            self.frame_lpage[nf] = lp
+            self.dirty = True
+            return []
+        if pos >= int(self.shared_len[seq]) and self.allocator.is_shared(f):
+            nf = self.allocator.alloc()          # raises before any mutation
+            self.counters["allocs"] += 1
+            self.allocator.deref(f)
+            self.block_table[seq, lp] = nf
+            self.frame_lpage[nf] = lp
+            self.counters["cow_copies"] += 1
+            self.dirty = True
+            return [CowCopy(src=f, dst=nf)]
+        return []
+
+    def free_seq(self, seq: int) -> None:
+        """Drop every reference ``seq`` holds (no-op under ``reserved`` --
+        the static tables ARE the reservation)."""
+        if self.policy == "reserved":
+            return
+        self.dirty = True
+        self._prompts.pop(seq, None)
+        row = self.block_table[seq]
+        for f in row[row >= 0]:
+            self.allocator.deref(int(f))
+            self.counters["frees"] += 1
+        self.block_table[seq] = -1
+        self.shared_len[seq] = 0
+
+    # -- exported tables (ride in cache["vm"] into the kernel) ----------------
+    def frame_ro(self) -> np.ndarray:
+        """Shared bit [n_frames]: refcount > 1, writes must be dropped."""
+        return self.allocator.shared_mask()
+
+    def tables(self) -> dict:
+        return {"block_table": self.block_table.copy(),
+                "frame_lpage": self.frame_lpage.copy(),
+                "frame_ro": self.frame_ro()}
+
+    # -- introspection / shutdown ---------------------------------------------
+    def used_count(self) -> int:
+        return self.allocator.used_count()
+
+    def free_count(self) -> int:
+        return self.allocator.free_count()
+
+    def stats(self) -> dict:
+        return {**self.allocator.stats(), **self.counters,
+                "policy": self.policy, "live_seqs": len(self._prompts)}
+
+    def shutdown(self) -> int:
+        """Release the reserved-policy reservation and report the number of
+        frames still referenced (the leak count -- 0 iff every sequence was
+        released)."""
+        if self.policy == "reserved":
+            for s in range(self.n_seqs):
+                for lp in range(self.max_lpages):
+                    f = int(self.block_table[s, lp])
+                    if f >= 0:
+                        self.allocator.deref(f)
+            self.block_table[:] = -1
+        return self.allocator.used_count()

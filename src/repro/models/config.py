@@ -78,10 +78,13 @@ class ModelConfig:
     ssd_chunk: int = 128
     remat: str = "block"                 # "none" | "block" | "dots" | "full"
     #: "batch"  -- [B, Hkv, S, hd] per layer (batch-sharded);
-    #: "paged"  -- EMem page store, fixed max_pages reservation per slot;
-    #: "pooled" -- EMem page store, frames allocated on demand from a shared
-    #:             pool via the emem_vm page tables (decouples the decode
-    #:             batch width from the KV memory reservation).
+    #: "paged"  -- EMem page store via the BlockManager's *reserved* policy
+    #:             (each slot statically owns its worst-case max_pages);
+    #: "pooled" -- EMem page store via the BlockManager's *on-demand*
+    #:             policy: frames allocated from a shared pool as sequences
+    #:             grow, with prefix sharing / copy-on-write and preemptive
+    #:             admission (decouples the decode batch width from the KV
+    #:             memory reservation).
     kv_layout: str = "batch"
     kv_dtype: str | None = None          # KV cache dtype override (e.g.
                                          # "float8_e4m3fn" -- halves KV traffic)

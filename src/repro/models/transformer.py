@@ -195,17 +195,29 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
                                  jnp.float32),
             }
         cache[f"b{i}"] = entry
-    if cfg.kv_layout == "pooled" and any(
+    if cfg.kv_layout in ("paged", "pooled") and any(
             cfg.layer_kind(i) == "attn" for i in range(cfg.layer_period)):
-        # frame-pool translation state, shared by every attention layer and
-        # maintained host-side by the serving engine (repro.serve.engine)
+        # BlockManager translation state, shared by every attention layer and
+        # maintained host-side by the serving engine (repro.serve.engine).
+        # "paged" starts from the identity tables (slot b owns frames
+        # b*max_pages..(b+1)*max_pages-1) so direct decode callers get the
+        # fixed layout without any host bookkeeping; "pooled" starts empty.
         slots = cfg.kv_page_slots
         max_pages = -(-max_len // slots)
-        n_frames = cfg.kv_pool_pages or batch_size * max_pages
+        if cfg.kv_layout == "pooled":
+            n_frames = cfg.kv_pool_pages or batch_size * max_pages
+            block_table = jnp.full((batch_size, max_pages), -1, jnp.int32)
+            frame_lpage = jnp.zeros((n_frames,), jnp.int32)
+        else:
+            n_frames = batch_size * max_pages
+            block_table = jnp.arange(n_frames, dtype=jnp.int32).reshape(
+                batch_size, max_pages)
+            frame_lpage = jnp.tile(jnp.arange(max_pages, dtype=jnp.int32),
+                                   batch_size)
         cache["vm"] = {
-            "block_table": jnp.full((batch_size, max_pages), -1, jnp.int32),
-            "frame_owner": jnp.full((n_frames,), -1, jnp.int32),
-            "frame_lpage": jnp.zeros((n_frames,), jnp.int32),
+            "block_table": block_table,
+            "frame_lpage": frame_lpage,
+            "frame_ro": jnp.zeros((n_frames,), bool),
         }
     return cache
 

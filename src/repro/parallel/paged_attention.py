@@ -15,6 +15,26 @@ The KV cache is a flat store of pages cyclically owned by the devices of the
 
 Query heads stay sharded over the tensor-parallel axis; K/V pages are
 replicated over it (GQA KV is small).
+
+Frame ownership is described by the ``vm`` translation state exported by the
+serving engine's :class:`repro.emem_vm.BlockManager` (``cache["vm"]``):
+
+  * ``block_table`` [B, max_lpages] -- logical page -> physical frame
+    (-1 = unmapped).  A frame may appear in SEVERAL sequences' rows: prefix
+    sharing backs a common prompt prefix with one physical copy, so
+    ownership is *membership* (``block_table[b, frame_lpage[f]] == f``),
+    not a single inverse map;
+  * ``frame_lpage`` [n_frames]   -- which in-sequence logical page a frame
+    holds (identical for every sharer: prefixes start at position 0);
+  * ``frame_ro``    [n_frames]   -- the shared bit (refcount > 1).  Writes
+    targeting a read-only frame are DROPPED: the host resolves copy-on-write
+    before the step, so a surviving write to a shared frame can only be the
+    idempotent re-run of a shared prompt token.
+
+Without ``vm`` the mapping is the fixed arithmetic layout (sequence ``b``
+owns pages ``b*max_pages .. (b+1)*max_pages-1``), kept for direct callers;
+``init_cache`` materializes the same mapping as identity tables so both
+``kv_layout`` values route through one code path in serving.
 """
 from __future__ import annotations
 
@@ -37,23 +57,24 @@ def _flat_axis_index(axes: tuple[str, ...]) -> jax.Array:
 
 
 def _partial_paged_attention(cfg: ModelConfig, q, k_pages, v_pages, lengths,
-                             *, b_of, lpage, head_start):
+                             *, owner_mask, lpage, head_start):
     """Partial attention of q against this shard's pages.
 
     q: [B, Hl, hd] (local heads); k/v_pages: [np_loc, slots, Hkv, hd];
-    b_of/lpage: [np_loc] sequence id (-1 = unowned page, fully masked) and
-    logical in-sequence page of each local page -- fixed layouts derive them
-    arithmetically, the pooled layout looks them up in the frame tables.
+    owner_mask: [B, np_loc] -- whether each local page belongs to sequence b
+    (several rows may claim one page under prefix sharing); lpage: [np_loc]
+    logical in-sequence page of each local page.
     Returns (acc [B, Hl, hd] unnormalized, m [B, Hl], l [B, Hl])."""
     b, hl, hd = q.shape
     np_loc, slots, hkv, _ = k_pages.shape
     scale = hd ** -0.5
     group = cfg.n_heads // cfg.n_kv_heads
 
-    # which sequence / in-sequence position each local token belongs to
+    # in-sequence position of each local token, and who may attend it
     pos = lpage[:, None] * slots + jnp.arange(slots)
-    tok_b = jnp.broadcast_to(b_of[:, None], pos.shape).reshape(-1)
     tok_pos = pos.reshape(-1)                              # [T_loc]
+    tok_owned = jnp.broadcast_to(owner_mask[:, :, None],
+                                 (b, np_loc, slots)).reshape(b, -1)
 
     # per-local-head KV head selection
     kvh = (head_start + jnp.arange(hl)) // group           # [Hl]
@@ -63,8 +84,7 @@ def _partial_paged_attention(cfg: ModelConfig, q, k_pages, v_pages, lengths,
     v_sel = jnp.take(vf, kvh, axis=1)
 
     logits = jnp.einsum("bhd,thd->bht", q.astype(jnp.float32), k_sel) * scale
-    valid = (tok_b[None, :] == jnp.arange(b)[:, None]) & \
-        (tok_pos[None, :] < lengths[:, None])              # [B, T_loc]
+    valid = tok_owned & (tok_pos[None, :] < lengths[:, None])  # [B, T_loc]
     if cfg.window is not None:
         valid &= tok_pos[None, :] >= (lengths[:, None] - cfg.window)
     logits = jnp.where(valid[:, None, :], logits, NEG_INF)
@@ -76,17 +96,38 @@ def _partial_paged_attention(cfg: ModelConfig, q, k_pages, v_pages, lengths,
     return acc, m, l
 
 
+def _write_target(bt, fr, wm, pidx, b, max_pages):
+    """Global frame each sequence writes this step, with drops applied.
+
+    Returns (gpage [B], ok [B]): ``ok`` is False for masked-off sequences,
+    unmapped pages, and shared (read-only) frames."""
+    if bt is not None:
+        gpage = bt[jnp.arange(b), pidx]
+        ro = fr[jnp.clip(gpage, 0)] & (gpage >= 0)
+        ok = wm & (gpage >= 0) & ~ro
+    else:
+        gpage = jnp.arange(b) * max_pages + pidx
+        ok = wm
+    return gpage, ok
+
+
+def _owner_mask(bt, fl, g_all, b, max_pages):
+    """[B, n_local_pages] membership: does page g back sequence b?"""
+    if bt is not None:
+        lpage = fl[g_all]
+        return bt[:, lpage] == g_all[None, :], lpage
+    b_of, lpage = g_all // max_pages, g_all % max_pages
+    return b_of[None, :] == jnp.arange(b)[:, None], lpage
+
+
 def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
                            v_pages, lengths, vm: dict | None = None,
                            write_mask=None):
     """q: [B, H, hd]; k_new/v_new: [B, Hkv, hd] (rope'd at position len-1);
     k/v_pages: [n_pages, slots, Hkv, hd] global.  Returns (out, pages').
 
-    With ``vm`` (the pooled layout's translation state: ``block_table``
-    [B, max_lpages] logical page -> frame, ``frame_owner``/``frame_lpage``
-    [n_frames] inverse maps, -1 = free) pages are allocated on demand from a
-    shared frame pool instead of a fixed per-sequence reservation; the
-    tables are host-managed by the serving engine via ``repro.emem_vm``.
+    ``vm`` is the BlockManager translation state documented in the module
+    docstring; without it the fixed arithmetic mapping applies.
 
     ``write_mask`` [B] suppresses the K/V write for masked-off sequences --
     the serving engine's admit() runs the whole decode batch to prefill one
@@ -113,29 +154,24 @@ def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
     tp_axis = ctx.tp_axis
     pooled = vm is not None
 
-    def body(q_l, k_new_l, v_new_l, kp_l, vp_l, len_l, bt, fo, fl, wm):
+    def body(q_l, k_new_l, v_new_l, kp_l, vp_l, len_l, bt, fl, fr, wm):
         sid = _flat_axis_index(kv_axes)
         tp_idx = jax.lax.axis_index(tp_axis)
         np_loc = kp_l.shape[0]
+        bt_ = bt if pooled else None
         # WRITE: scatter the new K/V row into its owning shard's page
         pidx = (len_l - 1) // slots
-        if pooled:
-            gpage = bt[jnp.arange(b), pidx]          # frame via block table
-        else:
-            gpage = jnp.arange(b) * max_pages + pidx
-        rows = jnp.where(wm & (gpage >= 0) & (gpage % n_shards == sid),
+        gpage, ok = _write_target(bt_, fr, wm, pidx, b, max_pages)
+        rows = jnp.where(ok & (gpage % n_shards == sid),
                          gpage // n_shards, np_loc)
         off = (len_l - 1) % slots
         kp_l = kp_l.at[rows, off].set(k_new_l.astype(kp_l.dtype), mode="drop")
         vp_l = vp_l.at[rows, off].set(v_new_l.astype(vp_l.dtype), mode="drop")
         # READ/compute: partial attention over owned pages
         g_all = jnp.arange(np_loc) * n_shards + sid   # global page/frame ids
-        if pooled:
-            b_of, lpage = fo[g_all], fl[g_all]
-        else:
-            b_of, lpage = g_all // max_pages, g_all % max_pages
+        owner_mask, lpage = _owner_mask(bt_, fl, g_all, b, max_pages)
         acc, m, l = _partial_paged_attention(
-            cfg, q_l, kp_l, vp_l, len_l, b_of=b_of, lpage=lpage,
+            cfg, q_l, kp_l, vp_l, len_l, owner_mask=owner_mask, lpage=lpage,
             head_start=tp_idx * hl)
         # merge partials across the emulated-memory shards
         m_glob = jax.lax.pmax(m, kv_axes)
@@ -146,10 +182,11 @@ def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
         return out, kp_l, vp_l
 
     if vm is None:
-        dummy = jnp.zeros((1,), jnp.int32)
-        bt, fo, fl = dummy[None], dummy, dummy
+        bt = jnp.zeros((1, 1), jnp.int32)
+        fl = jnp.zeros((1,), jnp.int32)
+        fr = jnp.zeros((1,), bool)
     else:
-        bt, fo, fl = vm["block_table"], vm["frame_owner"], vm["frame_lpage"]
+        bt, fl, fr = vm["block_table"], vm["frame_lpage"], vm["frame_ro"]
     kv_spec = P(kv_axes if len(kv_axes) > 1 else kv_axes[0])
     fn = shard_map(
         body, mesh=ctx.mesh,
@@ -157,7 +194,7 @@ def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
                   P(), P(), P(), P()),
         out_specs=(P(None, tp_axis, None), kv_spec, kv_spec),
         check_rep=False)
-    return fn(q, k_new, v_new, k_pages, v_pages, lengths, bt, fo, fl,
+    return fn(q, k_new, v_new, k_pages, v_pages, lengths, bt, fl, fr,
               write_mask)
 
 
@@ -166,24 +203,23 @@ def _single_shard(cfg, q, k_new, v_new, k_pages, v_pages, lengths, max_pages,
     b, h, hd = q.shape
     n_pages, slots = k_pages.shape[0], k_pages.shape[1]
     pidx = (lengths - 1) // slots
-    if vm is not None:
-        rows = vm["block_table"][jnp.arange(b), pidx]
-        safe_rows = jnp.where(rows >= 0, rows, n_pages)
-        b_of, lpage = vm["frame_owner"], vm["frame_lpage"]
-    else:
-        safe_rows = jnp.arange(b) * max_pages + pidx
-        g = jnp.arange(n_pages)
-        b_of, lpage = g // max_pages, g % max_pages
-    if write_mask is not None:
-        safe_rows = jnp.where(write_mask, safe_rows, n_pages)
+    if write_mask is None:
+        write_mask = jnp.ones((b,), bool)
+    bt = vm["block_table"] if vm is not None else None
+    fl = vm["frame_lpage"] if vm is not None else None
+    fr = vm["frame_ro"] if vm is not None else None
+    gpage, ok = _write_target(bt, fr, write_mask, pidx, b, max_pages)
+    safe_rows = jnp.where(ok, gpage, n_pages)
     off = (lengths - 1) % slots
     k_pages = k_pages.at[safe_rows, off].set(k_new.astype(k_pages.dtype),
                                              mode="drop")
     v_pages = v_pages.at[safe_rows, off].set(v_new.astype(v_pages.dtype),
                                              mode="drop")
+    g_all = jnp.arange(n_pages)
+    owner_mask, lpage = _owner_mask(bt, fl, g_all, b, max_pages)
     acc, m, l = _partial_paged_attention(
-        cfg, q, k_pages, v_pages, lengths, b_of=b_of, lpage=lpage,
-        head_start=jnp.int32(0))
+        cfg, q, k_pages, v_pages, lengths, owner_mask=owner_mask,
+        lpage=lpage, head_start=jnp.int32(0))
     out = (acc / jnp.where(l == 0.0, 1.0, l)[..., None]).astype(q.dtype)
     return out, k_pages, v_pages
 
@@ -203,3 +239,25 @@ def paged_decode_block(cfg: ModelConfig, p_attn: dict, h: jax.Array,
         entry["k_pages"], entry["v_pages"], lengths, vm, write_mask)
     out = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p_attn["wo"]
     return out, {"k_pages": kp, "v_pages": vp}
+
+
+def cow_copy_pages(cache: dict, copies) -> dict:
+    """Apply BlockManager CowCopy records to every attention layer's pages.
+
+    Device-side row copies (k/v_pages are [n_periods, n_pages, slots, ...]);
+    host-driven, outside the jitted decode -- COW is a control-plane event.
+    """
+    if not copies:
+        return cache
+    src = jnp.asarray([c.src for c in copies], jnp.int32)
+    dst = jnp.asarray([c.dst for c in copies], jnp.int32)
+    out = dict(cache)
+    for key, entry in cache.items():
+        if key.startswith("b") and "k_pages" in entry:
+            out[key] = {
+                "k_pages": entry["k_pages"].at[:, dst].set(
+                    entry["k_pages"][:, src]),
+                "v_pages": entry["v_pages"].at[:, dst].set(
+                    entry["v_pages"][:, src]),
+            }
+    return out

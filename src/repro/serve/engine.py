@@ -6,23 +6,35 @@ written into the slot), then advanced together by the shared decode step --
 the standard continuous-batching pattern (vLLM/Orca) on top of this repo's
 model facade.
 
-KV layouts:
-  * ``kv_layout="paged"``  -- the emulated-memory page store with a fixed
-    ``max_pages`` reservation per slot (decode runs the sequence-parallel
-    merge path);
-  * ``kv_layout="pooled"`` -- same page store, but frames are allocated on
-    demand from a shared pool (``repro.emem_vm.FrameAllocator``) as each
-    sequence grows, and freed when the request completes.  The block /
-    frame-owner tables live host-side here and are pushed into the cache
-    pytree (``cache["vm"]``) before every decode.  Admission checks
-    free-frame *headroom* (worst-case pages for the request vs frames not
-    yet claimed by running requests), not just free slots -- so the batch
-    width can exceed what a fixed per-slot reservation would allow.
+KV frame ownership is unified behind one refcounted
+:class:`repro.emem_vm.BlockManager`: every sequence goes through a
+logical->frame block table that rides in the cache pytree (``cache["vm"]``)
+into the paged-attention kernel.  The two paged ``kv_layout`` values are
+just allocation policies:
+
+  * ``"paged"``  -- *reserved*: every slot permanently owns its worst-case
+    ``max_pages`` frames (the fixed slots x max_pages layout, now expressed
+    as a static block table);
+  * ``"pooled"`` -- *on-demand*: frames come from the shared pool as each
+    sequence grows and return at completion.  On top of the indirection:
+
+      - **prefix sharing / copy-on-write**: admission matches the prompt
+        against live sequences' prompts; common-prefix pages are shared
+        (refcount++, read-only via the ``frame_ro`` bit in ``cache["vm"]``)
+        and prefill resumes after the shared tokens.  The first divergent
+        write copies the page to a private frame (BlockManager ``CowCopy``
+        records, applied to the device pages before the step).
+      - **preemptive admission**: ``can_admit`` reserves only what the
+        prefill immediately needs (not the worst case), so the pool packs
+        optimistically.  When a growing sequence finds the pool exhausted,
+        the youngest sequence is preempted: its frames are freed and the
+        request is requeued with its generated tokens as a prompt
+        extension (deterministic greedy decode makes the re-run
+        token-identical).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -60,22 +72,35 @@ class ServeEngine:
         self._decode_jit = jax.jit(
             lambda p, t, c, l, m: model.decode_step(p, t, c, l,
                                                     write_mask=m))
-        self.pooled = model.cfg.kv_layout == "pooled"
-        if self.pooled:
-            from repro.emem_vm import FrameAllocator
-            slots_pp = model.cfg.kv_page_slots
-            self.page_slots = slots_pp
-            self.max_lpages = -(-ecfg.max_len // slots_pp)
-            self.n_frames = (model.cfg.kv_pool_pages
-                             or ecfg.slots * self.max_lpages)
-            self.allocator = FrameAllocator(self.n_frames)
-            self._block_table = np.full((ecfg.slots, self.max_lpages), -1,
-                                        np.int32)
-            self._frame_owner = np.full(self.n_frames, -1, np.int32)
-            self._frame_lpage = np.zeros(self.n_frames, np.int32)
-            # worst-case frames reserved at admission but not yet allocated
-            self._unmaterialized = np.zeros(ecfg.slots, np.int64)
-            self._vm_stale = True
+        #: requests preempted since the last drain (scheduler requeues them)
+        self.preempted: list[Request] = []
+        self._admit_seq = np.zeros(ecfg.slots, np.int64)  # admission order
+        self._admit_counter = 0
+        self.counters = {"admitted": 0, "completed": 0, "preempted": 0,
+                         "shared_prompt_tokens": 0, "leaked_frames": 0}
+        cfg = model.cfg
+        if cfg.kv_layout in ("paged", "pooled"):
+            from repro.emem_vm import BlockManager
+            self.page_slots = cfg.kv_page_slots
+            self.max_lpages = -(-ecfg.max_len // self.page_slots)
+            if cfg.kv_layout == "pooled":
+                policy = "on_demand"
+                self.n_frames = (cfg.kv_pool_pages
+                                 or ecfg.slots * self.max_lpages)
+            else:
+                policy = "reserved"
+                self.n_frames = ecfg.slots * self.max_lpages
+            # prefix sharing skips prefill of shared tokens, which is only
+            # sound when every layer's per-token state lives in the shared
+            # KV pages (no recurrent SSM state to rebuild)
+            attn_only = all(cfg.layer_kind(i) == "attn"
+                            for i in range(cfg.layer_period))
+            self.blocks = BlockManager(
+                self.n_frames, ecfg.slots, self.max_lpages, self.page_slots,
+                policy=policy, share_prefixes=attn_only)
+            self.blocks.dirty = True     # push the initial (empty) tables
+        else:
+            self.blocks = None
 
     def _decode(self, params, toks, cache, lengths, write_mask=None):
         """One jitted decode, synced before returning.
@@ -100,105 +125,172 @@ class ServeEngine:
         jax.block_until_ready(logits)
         return logits, cache
 
-    # -- pooled frame management ---------------------------------------------
-    def frames_needed(self, req: Request) -> int:
-        """Worst-case page count for ``req`` (its own length bound, not the
-        fixed layout's blanket max_len reservation)."""
-        prompt_len = max(len(req.prompt), 1)       # empty prompt = 1 BOS
-        total = min(prompt_len + req.max_new_tokens, self.ecfg.max_len)
-        return -(-total // self.page_slots)
+    # -- frame management (both paged layouts, via the BlockManager) ---------
+    def _tokens_for(self, req: Request) -> np.ndarray:
+        """The tokens a (re-)admission must prefill: the prompt plus any
+        tokens generated before a preemption (the requeued request's prompt
+        extension).  An empty prompt becomes one implicit BOS so ``logits``
+        is always bound."""
+        toks = np.asarray(req.prompt, np.int32).ravel()
+        if req.output:
+            toks = np.concatenate([toks,
+                                   np.asarray(req.output, np.int32)])
+        return toks if len(toks) else np.zeros(1, np.int32)
 
-    def can_admit(self, req: Request) -> bool:
-        """Admission control: the request must fit the engine at all (a
-        prompt needs room for at least one generated token under max_len),
-        have a free slot, and (pooled only) enough free-frame headroom
-        beyond what running requests may still claim."""
-        if max(len(req.prompt), 1) > self.ecfg.max_len - 2:
-            return False
-        if not self.free_slots():
-            return False
-        if not self.pooled:
+    def _grow(self, slot: int, new_len: int, lengths: np.ndarray) -> bool:
+        """Back position ``new_len - 1`` of ``slot`` with a writable frame,
+        applying any copy-on-write and preempting the youngest sequence on
+        pool exhaustion.  Returns False iff ``slot`` itself was preempted."""
+        if self.blocks is None:
             return True
-        headroom = self.allocator.free_count() - int(
-            self._unmaterialized.sum())
-        return headroom >= self.frames_needed(req)
+        from repro.emem_vm import OutOfFrames
+        while True:
+            try:
+                copies = self.blocks.ensure_writable(slot, new_len - 1)
+            except OutOfFrames:
+                victim = max(
+                    (i for i, r in enumerate(self.slot_req) if r is not None),
+                    key=lambda s: self._admit_seq[s])
+                self._preempt(victim, lengths)
+                if victim == slot:
+                    return False
+                continue
+            if copies:
+                from repro.parallel.paged_attention import cow_copy_pages
+                self.cache = cow_copy_pages(self.cache, copies)
+            return True
 
-    def _ensure_frame(self, slot: int, new_len: int) -> None:
-        """Materialize the frame backing position ``new_len - 1``."""
-        if not self.pooled:
-            return
-        lpage = (new_len - 1) // self.page_slots
-        if self._block_table[slot, lpage] >= 0:
-            return
-        frame = self.allocator.alloc()   # covered by the admission reserve
-        self._block_table[slot, lpage] = frame
-        self._frame_owner[frame] = slot
-        self._frame_lpage[frame] = lpage
-        self._unmaterialized[slot] -= 1
-        self._vm_stale = True
+    def _is_complete(self, req: Request, cur_len: int) -> bool:
+        """The post-decode completion conditions, evaluable host-side: used
+        at preemption so a request evicted right after its final token is
+        finished, not re-run (an extra decode would break token identity)."""
+        hit_eos = (self.ecfg.eos_id is not None
+                   and req.output and req.output[-1] == self.ecfg.eos_id)
+        return (len(req.output) >= req.max_new_tokens or hit_eos
+                or cur_len >= self.ecfg.max_len - 1)
 
-    def _release_frames(self, slot: int) -> None:
-        if not self.pooled:
+    def _preempt(self, slot: int, lengths: np.ndarray) -> None:
+        """Evict ``slot``: free its frames and requeue the request.  Its
+        generated tokens ride along as a prompt extension, so the greedy
+        re-run after re-admission is token-identical.  A request that had
+        already produced its last token completes instead of requeueing
+        (re-admitting it would decode past its budget / EOS / max_len)."""
+        req = self.slot_req[slot]
+        cur_len = int(lengths[slot])
+        self.slot_req[slot] = None
+        self.budget[slot] = 0
+        lengths[slot] = 0
+        if self.blocks is not None:
+            self.blocks.free_seq(slot)
+        if self._is_complete(req, cur_len):
+            req.done = True
+            self.counters["completed"] += 1
             return
-        frames = self._block_table[slot][self._block_table[slot] >= 0]
-        if len(frames):
-            self.allocator.bulk_free(frames)
-            self._frame_owner[frames] = -1
-        self._block_table[slot] = -1
-        self._unmaterialized[slot] = 0
-        self._vm_stale = True
+        self.counters["preempted"] += 1
+        self.preempted.append(req)
+
+    def drain_preempted(self) -> list[Request]:
+        out, self.preempted = self.preempted, []
+        return out
+
+    def _release(self, slot: int) -> None:
+        if self.blocks is not None:
+            self.blocks.free_seq(slot)
 
     def _sync_vm(self) -> None:
-        """Push the host-side tables into the cache pytree if they changed."""
-        if self.pooled and self._vm_stale:
-            self.cache["vm"] = {
-                "block_table": jnp.array(self._block_table),
-                "frame_owner": jnp.array(self._frame_owner),
-                "frame_lpage": jnp.array(self._frame_lpage),
-            }
-            self._vm_stale = False
+        """Push the BlockManager tables into the cache pytree if changed."""
+        if self.blocks is not None and self.blocks.dirty:
+            self.cache["vm"] = {k: jnp.array(v)
+                                for k, v in self.blocks.tables().items()}
+            self.blocks.dirty = False
 
     def pool_stats(self) -> dict:
-        if not self.pooled:
+        if self.blocks is None:
             return {}
-        return self.allocator.stats()
+        return self.blocks.stats()
+
+    def shutdown(self) -> dict:
+        """Leak detector: at shutdown every frame reference must have been
+        released.  Returns the engine counters (dispatch_stats-style);
+        raises if any sequence is still active or any frame leaked."""
+        active = [r.uid for r in self.slot_req if r is not None]
+        if active:
+            raise RuntimeError(f"shutdown with active requests {active}")
+        leaked = self.blocks.shutdown() if self.blocks is not None else 0
+        self.counters["leaked_frames"] = leaked
+        stats = dict(self.counters)
+        if self.blocks is not None:
+            stats.update(self.blocks.counters)
+            stats["shared_prompt_tokens"] = \
+                self.blocks.counters["shared_tokens"]
+        if leaked:
+            raise RuntimeError(
+                f"KV frame leak at shutdown: {leaked} frames still "
+                f"referenced ({stats})")
+        return stats
 
     # -- admission ----------------------------------------------------------
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
+    def can_admit(self, req: Request) -> bool:
+        """Admission control: the request must fit the engine at all (room
+        for at least one generated token under max_len) and have a free
+        slot.  With a frame pool, admission is *optimistic*: only the pages
+        the prefill immediately needs (after prefix sharing) must be free --
+        decode-time growth is covered by preemption, not a worst-case
+        reservation."""
+        toks = self._tokens_for(req)
+        if len(toks) > self.ecfg.max_len - 2:
+            return False
+        if not self.free_slots():
+            return False
+        if self.blocks is None:
+            return True
+        return self.blocks.can_admit(toks)
+
     def admit(self, req: Request, slot: int) -> None:
         """Prefill a request into a slot (token-by-token writes share the
-        decode path, so this works for every KV layout)."""
+        decode path, so this works for every KV layout).  Prompt pages
+        shared with a live sequence are skipped: prefill resumes at the
+        first unshared token (the last prompt token always re-runs to bind
+        the next-token logits; its write to a still-shared frame is dropped
+        by the kernel's ``frame_ro`` bit)."""
         assert self.slot_req[slot] is None
         if not self.can_admit(req):      # before any state is mutated
             raise RuntimeError(
                 "inadmissible request (prompt too long for max_len, or no "
                 "free-frame headroom)")
+        toks = self._tokens_for(req)
         self.slot_req[slot] = req
-        self.budget[slot] = req.max_new_tokens
+        self.budget[slot] = req.max_new_tokens - len(req.output)
+        self._admit_counter += 1
+        self._admit_seq[slot] = self._admit_counter
         self._reset_slot(slot)
-        if self.pooled:
-            self._unmaterialized[slot] = self.frames_needed(req)
-        # an empty prompt still needs one position to produce first logits:
-        # treat token 0 as an implicit BOS so `logits` is always bound
-        prompt = req.prompt if len(req.prompt) else np.zeros(1, np.int32)
+        shared = 0
+        if self.blocks is not None:
+            shared = self.blocks.begin_seq(slot, toks)
+            self.counters["shared_prompt_tokens"] += shared
+        start = min(shared, len(toks) - 1)
         mask = np.zeros(self.ecfg.slots, bool)
         mask[slot] = True                # only this slot commits KV writes
         lengths = np.array(self.lengths)
-        for t, tok in enumerate(prompt):
+        for t in range(start, len(toks)):
             lengths[slot] = t + 1
             # jnp.array (copy=True), NOT jnp.asarray: asarray zero-copies the
             # numpy buffer on CPU, and with async dispatch the in-flight
             # decode would race the next iteration's in-place mutation
             self.lengths = jnp.array(lengths)
-            self._ensure_frame(slot, t + 1)
-            toks = np.zeros((self.ecfg.slots, 1), np.int32)
-            toks[slot, 0] = tok
+            if not self._grow(slot, t + 1, lengths):
+                return          # preempted mid-prefill; requeued for retry
+            tok_batch = np.zeros((self.ecfg.slots, 1), np.int32)
+            tok_batch[slot, 0] = toks[t]
             self._sync_vm()
             logits, self.cache = self._decode(
-                self.params, jnp.array(toks), self.cache, self.lengths, mask)
+                self.params, jnp.array(tok_batch), self.cache, self.lengths,
+                mask)
         req._next = int(jnp.argmax(logits[slot, :self.model.cfg.vocab_size]))
+        self.counters["admitted"] += 1
 
     def _reset_slot(self, slot: int) -> None:
         lengths = np.array(self.lengths)
@@ -207,21 +299,32 @@ class ServeEngine:
 
     # -- decode -------------------------------------------------------------
     def step(self) -> None:
-        """One decode step for every active slot."""
+        """One decode step for every active slot.
+
+        Frame growth runs oldest-sequence-first so that on pool exhaustion
+        the youngest sequences are preempted while the oldest keep making
+        progress (guaranteeing liveness)."""
+        order = sorted((i for i, r in enumerate(self.slot_req)
+                        if r is not None),
+                       key=lambda s: self._admit_seq[s])
+        if not order:
+            return
+        toks = np.zeros((self.ecfg.slots, 1), np.int32)
+        lengths = np.array(self.lengths)
+        for i in order:
+            req = self.slot_req[i]
+            if req is None:              # preempted by an earlier grow
+                continue
+            req.output.append(req._next)
+            toks[i, 0] = req._next
+            lengths[i] += 1
+            self._grow(i, int(lengths[i]), lengths)
+        self.lengths = jnp.array(lengths)
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
-        toks = np.zeros((self.ecfg.slots, 1), np.int32)
         mask = np.zeros(self.ecfg.slots, bool)
-        lengths = np.array(self.lengths)
-        for i in active:
-            req = self.slot_req[i]
-            toks[i, 0] = req._next
-            req.output.append(req._next)
-            lengths[i] += 1
-            mask[i] = True
-            self._ensure_frame(i, int(lengths[i]))
-        self.lengths = jnp.array(lengths)
+        mask[active] = True
         self._sync_vm()
         logits, self.cache = self._decode(
             self.params, jnp.array(toks), self.cache, self.lengths, mask)
@@ -236,4 +339,5 @@ class ServeEngine:
                     int(lengths[i]) >= self.ecfg.max_len - 1:
                 req.done = True
                 self.slot_req[i] = None
-                self._release_frames(i)
+                self.counters["completed"] += 1
+                self._release(i)

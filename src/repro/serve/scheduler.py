@@ -1,8 +1,13 @@
 """Request scheduler: FIFO admission with continuous batching.
 
-Admission asks the engine for headroom (``engine.can_admit``): with the
-pooled KV layout a free slot is not enough -- the shared frame pool must
-also have room for the request's worst-case page count.
+Admission asks the engine for headroom (``engine.can_admit``): with a frame
+pool a free slot is not enough -- the pool must also hold the pages the
+request's prefill immediately needs (after prefix sharing).  Admission is
+otherwise *optimistic*: decode-time growth is not reserved up front, and
+when the pool runs dry the engine preempts its youngest sequence.
+Preempted requests are requeued at the FRONT of the queue (they are older
+than anything still waiting) with their generated tokens folded into the
+prompt, so the greedy re-run after re-admission is token-identical.
 """
 from __future__ import annotations
 
@@ -29,6 +34,13 @@ class Scheduler:
             if not self.engine.can_admit(self.queue[0]):
                 break                     # FIFO: wait for headroom
             self.engine.admit(self.queue.popleft(), slot)
+            self._requeue_preempted()     # an admission may itself preempt
+
+    def _requeue_preempted(self) -> None:
+        # the engine preempts youngest-first; appendleft in that order
+        # leaves the oldest preempted request at the queue front
+        for req in self.engine.drain_preempted():
+            self.queue.appendleft(req)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Drive until all submitted requests complete."""
@@ -45,6 +57,7 @@ class Scheduler:
                     f"than the pool holds)")
             inflight = list({id(r): r for r in inflight + before}.values())
             self.engine.step()
+            self._requeue_preempted()
             for r in inflight:
                 if r.done and id(r) not in self._completed_ids:
                     self._completed_ids.add(id(r))

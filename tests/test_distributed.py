@@ -253,7 +253,8 @@ def test_pooled_decode_matches_batch_on_mesh():
         cache = model.init_cache(B, 16)
         # host-managed tables with deliberately scattered frames
         bt = np.full((B, 4), -1, np.int32)
-        fo = np.full(16, -1, np.int32); fl = np.zeros(16, np.int32)
+        fl = np.zeros(16, np.int32)
+        fr = np.zeros(16, bool)
         alloc = iter([5, 2, 11, 7, 3, 13, 1, 9])
         lengths = jnp.zeros((B,), jnp.int32)
         for t in range(S):
@@ -261,10 +262,10 @@ def test_pooled_decode_matches_batch_on_mesh():
             for b in range(B):
                 lp = t // 4
                 if bt[b, lp] < 0:
-                    f = next(alloc); bt[b, lp] = f; fo[f] = b; fl[f] = lp
+                    f = next(alloc); bt[b, lp] = f; fl[f] = lp
             cache["vm"] = {"block_table": jnp.array(bt),
-                           "frame_owner": jnp.array(fo),
-                           "frame_lpage": jnp.array(fl)}
+                           "frame_lpage": jnp.array(fl),
+                           "frame_ro": jnp.array(fr)}
             logits_p, cache = model.decode_step(params, toks[:, t:t+1],
                                                 cache, lengths)
             jax.block_until_ready(logits_p)
@@ -279,3 +280,47 @@ def test_pooled_decode_matches_batch_on_mesh():
         print("POOLED_MESH_OK", err)
     """)
     assert "POOLED_MESH_OK" in out
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_serve_token_identity_both_policies_on_meshes(n_devices):
+    """The serving determinism test, parametrized over both BlockManager
+    policies (kv_layout paged=reserved / pooled=on-demand) on 1/2/4-device
+    CPU meshes: identical tokens from the unified block-table path."""
+    out = run_with_devices(f"""
+        import dataclasses
+        from repro.models import Model, ModelConfig
+        from repro.parallel import mesh_ctx
+        from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+        n_dev = {n_devices}
+        base = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                           n_heads=8, n_kv_heads=2, head_dim=16, d_ff=128,
+                           vocab_size=128, kv_layout="paged", kv_page_slots=4,
+                           param_dtype="float32", compute_dtype="float32")
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, 128,
+                                int(rng.integers(2, 7))).astype(np.int32)
+                   for _ in range(4)]
+        outs = {{}}
+        for layout in ("paged", "pooled"):
+            cfg = dataclasses.replace(
+                base, kv_layout=layout,
+                kv_pool_pages=16 if layout == "pooled" else None)
+            mesh = make_mesh((n_dev, 1), ("data", "model"))
+            mesh_ctx.set_context(mesh, batch_axes=("data",),
+                                 tp_axis="model", kv_axes=("data",))
+            model = Model(cfg)
+            params = model.init(jax.random.key(0))
+            engine = ServeEngine(model, params,
+                                 EngineConfig(slots=2, max_len=32))
+            sched = Scheduler(engine)
+            sched.submit([Request(uid=i, prompt=p, max_new_tokens=4)
+                          for i, p in enumerate(prompts)])
+            done = sched.run()
+            engine.shutdown()            # leak detector on every mesh
+            outs[layout] = {{r.uid: tuple(r.output) for r in done}}
+            mesh_ctx.clear_context()
+        assert outs["paged"] == outs["pooled"], outs
+        print("SERVE_MESH_OK", n_dev)
+    """, n_devices=max(n_devices, 2))
+    assert "SERVE_MESH_OK" in out

@@ -46,19 +46,43 @@ def test_allocator_alloc_free_cycle():
 
 
 def test_allocator_double_free_rejected():
+    """Regression: a double-freed frame must never reach the free list twice
+    (it would be handed to two owners)."""
     a = FrameAllocator(4)
     f = a.alloc()
     a.free(f)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="double free"):
         a.free(f)
+    # the freed frame is on the free list exactly once: draining the pool
+    # hands out 4 distinct frames
+    assert sorted(a.bulk_alloc(4)) == list(range(4))
+
+
+def test_allocator_refcounts():
+    a = FrameAllocator(4)
+    f = a.alloc()
+    assert a.refcount(f) == 1 and not a.is_shared(f)
+    assert a.ref(f) == 2 and a.is_shared(f)
+    assert a.shared_count() == 1 and a.shared_mask()[f]
+    a.free(f)                            # one owner drops: still allocated
+    assert a.refcount(f) == 1 and a.free_count() == 3
+    a.free(f)                            # last owner: back on the free list
+    assert a.refcount(f) == 0 and a.free_count() == 4
+    with pytest.raises(ValueError, match="double free"):
+        a.deref(f)
+    with pytest.raises(ValueError, match="ref of free frame"):
+        a.ref(f)
 
 
 def test_allocator_stats():
     a = FrameAllocator(10)
-    a.bulk_alloc(5)
+    frames = a.bulk_alloc(5)
     s = a.stats()
     assert s["used"] == 5 and s["free"] == 5 and s["occupancy"] == 0.5
+    assert s["shared"] == 0
     assert 0.0 <= s["fragmentation"] <= 1.0
+    a.ref(frames[0])
+    assert a.stats()["shared"] == 1
 
 
 # -- page table ----------------------------------------------------------------
@@ -243,3 +267,105 @@ def test_property_vm_read_after_write(seed):
     vm.vwrite(jnp.asarray(addrs), jnp.asarray(vals))
     np.testing.assert_allclose(np.asarray(vm.vread(jnp.asarray(addrs))),
                                vals, rtol=1e-6)
+
+
+# -- block manager -------------------------------------------------------------
+def _bm(**kw):
+    from repro.emem_vm import BlockManager
+    base = dict(n_frames=16, n_seqs=4, max_lpages=4, page_slots=4,
+                policy="on_demand", share_prefixes=True)
+    base.update(kw)
+    return BlockManager(**base)
+
+
+def test_block_manager_reserved_is_static():
+    bm = _bm(policy="reserved", n_frames=16)
+    t = bm.tables()
+    np.testing.assert_array_equal(t["block_table"],
+                                  np.arange(16).reshape(4, 4))
+    assert not t["frame_ro"].any()
+    assert bm.begin_seq(0, np.arange(5)) == 0        # nothing shared
+    assert bm.ensure_writable(0, 7) == []            # already materialized
+    bm.free_seq(0)                                   # keeps the reservation
+    assert bm.used_count() == 16
+    assert bm.shutdown() == 0                        # reservation released
+
+
+def test_block_manager_reserved_needs_full_pool():
+    with pytest.raises(ValueError, match="reserved"):
+        _bm(policy="reserved", n_frames=15)
+
+
+def test_block_manager_prefix_share_and_cow():
+    bm = _bm()
+    prompt = np.arange(10, dtype=np.int32)           # pages 0,1 full; 2 partial
+    assert bm.begin_seq(0, prompt) == 0
+    for pos in range(10):
+        assert bm.ensure_writable(0, pos) == []      # plain allocs, no COW
+    assert bm.used_count() == 3
+
+    # identical prompt: everything shared, zero new frames needed
+    assert bm.admit_frames_needed(prompt) == 0
+    assert bm.begin_seq(1, prompt) == 10
+    assert bm.used_count() == 3 and bm.counters["shared_frames"] == 3
+    ro = bm.frame_ro()
+    assert ro[bm.block_table[0][:3]].all()           # all shared -> read-only
+
+    # seq 1's first divergent write (pos 10, page 2) copies page 2
+    copies = bm.ensure_writable(1, 10)
+    assert len(copies) == 1
+    assert copies[0].src == bm.block_table[0][2]
+    assert copies[0].dst == bm.block_table[1][2]
+    assert bm.block_table[1][2] != bm.block_table[0][2]
+    assert bm.counters["cow_copies"] == 1
+    # page 2 is private again on both sides; pages 0-1 still shared
+    ro = bm.frame_ro()
+    assert not ro[bm.block_table[0][2]] and not ro[bm.block_table[1][2]]
+    assert ro[bm.block_table[0][:2]].all()
+
+    # donor leaving keeps the sharer's frames alive
+    bm.free_seq(0)
+    assert (bm.block_table[1][:3] >= 0).all()
+    assert not bm.frame_ro().any()                   # sole owner everywhere
+    bm.free_seq(1)
+    assert bm.used_count() == 0 and bm.shutdown() == 0
+
+
+def test_block_manager_partial_page_share():
+    bm = _bm()
+    a = np.array([1, 2, 3, 4, 5, 6], np.int32)       # page 0 full, page 1 half
+    bm.begin_seq(0, a)
+    for pos in range(6):
+        bm.ensure_writable(0, pos)
+    b = np.array([1, 2, 3, 4, 5, 9], np.int32)       # diverges at pos 5
+    assert bm.admit_frames_needed(b) == 1            # COW of page 1
+    assert bm.begin_seq(1, b) == 5
+    assert bm.block_table[1][1] == bm.block_table[0][1]
+    copies = bm.ensure_writable(1, 5)                # divergent write -> COW
+    assert len(copies) == 1 and bm.block_table[1][1] != bm.block_table[0][1]
+    # writes below shared_len never COW (idempotent re-runs are dropped by
+    # the kernel's frame_ro bit instead)
+    assert bm.ensure_writable(1, 3) == []
+    assert bm.block_table[1][0] == bm.block_table[0][0]
+
+
+def test_block_manager_out_of_frames_state_intact():
+    from repro.emem_vm import OutOfFrames
+    bm = _bm(n_frames=2, share_prefixes=False)
+    bm.begin_seq(0, np.arange(8))
+    bm.ensure_writable(0, 0)
+    bm.ensure_writable(0, 4)
+    with pytest.raises(OutOfFrames):
+        bm.ensure_writable(1, 0)
+    assert (bm.block_table[1] < 0).all()             # nothing half-mapped
+    bm.free_seq(0)
+    assert bm.ensure_writable(1, 0) == []            # now it fits
+    bm.free_seq(1)
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_leak_detector():
+    bm = _bm()
+    bm.begin_seq(0, np.arange(4))
+    bm.ensure_writable(0, 0)
+    assert bm.shutdown() == 1                        # seq 0 never released

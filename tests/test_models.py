@@ -297,12 +297,139 @@ def test_oversized_prompt_rejected(rng):
         with pytest.raises(RuntimeError, match="inadmissible"):
             engine.admit(big, 0)
         assert engine.slot_req[0] is None          # no state leaked
-        if engine.pooled:
-            assert engine.allocator.free_count() == engine.n_frames
+        if engine.blocks is not None and engine.blocks.policy == "on_demand":
+            assert engine.blocks.free_count() == engine.n_frames
         sched = Scheduler(engine)
         sched.submit([big])
         with pytest.raises(RuntimeError, match="never be admitted"):
             sched.run()
+
+
+def _serve_pooled(rng, prompts, max_new=4, slots=4, max_len=32,
+                  pool_pages=24, share=True):
+    from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+    cfg = _pooled_cfg(pool_pages=pool_pages)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params,
+                         EngineConfig(slots=slots, max_len=max_len))
+    engine.blocks.share_prefixes = share
+    sched = Scheduler(engine)
+    sched.submit([Request(uid=i, prompt=p, max_new_tokens=max_new)
+                  for i, p in enumerate(prompts)])
+    done = sched.run()
+    stats = engine.shutdown()            # leak detector: raises on leak
+    return {r.uid: tuple(r.output) for r in done}, stats
+
+
+def test_serve_prefix_sharing_token_identity(rng):
+    """Requests with a common system prompt share its KV pages (one physical
+    copy, refcounted) and still decode token-identically to the unshared
+    run; divergence is handled by copy-on-write."""
+    system = rng.integers(0, 64, 10).astype(np.int32)
+    prompts = [np.concatenate([system,
+                               rng.integers(0, 64, 3).astype(np.int32)])
+               for _ in range(5)]
+    shared, st_s = _serve_pooled(rng, prompts, share=True)
+    unshared, st_u = _serve_pooled(rng, prompts, share=False)
+    assert shared == unshared
+    # slots=4: three requests run concurrently with the donor and share
+    # (the fifth admits after everything completed -- nothing live to match)
+    assert st_s["shared_prompt_tokens"] >= 3 * len(system)
+    assert st_s["cow_copies"] > 0                 # tails diverge mid-page
+    assert st_u["shared_prompt_tokens"] == 0
+    assert st_s["allocs"] < st_u["allocs"]        # fewer frames touched
+    assert st_s["leaked_frames"] == st_u["leaked_frames"] == 0
+
+
+def test_serve_preemption_token_identity(rng):
+    """Optimistic admission + preemption: a pool too small for everyone's
+    worst case still completes every request, token-identically to an
+    unconstrained pool (preempted requests re-prefill their generated
+    tokens as a prompt extension)."""
+    prompts = [rng.integers(0, 64, int(rng.integers(3, 8))).astype(np.int32)
+               for _ in range(5)]
+    tight, st_tight = _serve_pooled(rng, prompts, max_new=6, slots=5,
+                                    pool_pages=10, share=False)
+    roomy, st_roomy = _serve_pooled(rng, prompts, max_new=6, slots=5,
+                                    pool_pages=64, share=False)
+    assert tight == roomy
+    assert st_tight["preempted"] > 0 and st_roomy["preempted"] == 0
+    assert st_tight["completed"] == len(prompts)
+
+
+def test_preempt_after_final_token_completes(rng):
+    """Regression: a sequence preempted right after its final token was
+    appended (but before the decode ran) must complete, not requeue --
+    re-admission would decode past its budget and change the output."""
+    from repro.serve import EngineConfig, Request, ServeEngine
+    cfg = _pooled_cfg(pool_pages=16)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, EngineConfig(slots=2, max_len=32))
+    req = Request(uid=0, prompt=rng.integers(0, 64, 5).astype(np.int32),
+                  max_new_tokens=3)
+    engine.admit(req, 0)
+    engine.step()
+    engine.step()
+    assert len(req.output) == 2 and not req.done
+    # reproduce the step()-loop state at the moment of pool exhaustion:
+    # the last budgeted token is appended, the decode has not yet run
+    req.output.append(req._next)
+    lengths = np.array(engine.lengths)
+    lengths[0] += 1
+    engine._preempt(0, lengths)
+    assert req.done and len(req.output) == 3
+    assert engine.drain_preempted() == []        # nothing requeued
+    assert engine.shutdown()["completed"] == 1
+
+
+def test_serve_admits_beyond_worst_case_reservation(rng):
+    """PR 1's headroom rule blocked admission unless the request's WORST
+    case fit; optimistic admission packs the pool by prompt need only."""
+    from repro.serve import EngineConfig, Request, ServeEngine
+    cfg = _pooled_cfg(pool_pages=4)      # 16 positions
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, EngineConfig(slots=4, max_len=16))
+    reqs = [Request(uid=i, prompt=rng.integers(0, 64, 4).astype(np.int32),
+                    max_new_tokens=8) for i in range(3)]
+    # worst case is 3 pages each (9 > 4 frames): PR 1 admitted only one
+    for slot, r in enumerate(reqs):
+        assert engine.can_admit(r)       # prompt needs just 1 page each
+        engine.admit(r, slot)
+    assert sum(r is not None for r in engine.slot_req) == 3
+
+
+def test_serve_shutdown_leak_detector(rng):
+    from repro.serve import EngineConfig, Request, ServeEngine
+    cfg = _pooled_cfg(pool_pages=16)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, EngineConfig(slots=2, max_len=32))
+    req = Request(uid=0, prompt=rng.integers(0, 64, 5).astype(np.int32),
+                  max_new_tokens=3)
+    engine.admit(req, 0)
+    with pytest.raises(RuntimeError, match="active"):
+        engine.shutdown()                # still running: refuse
+    while engine.slot_req[0] is not None:
+        engine.step()
+    stats = engine.shutdown()
+    assert stats["leaked_frames"] == 0 and stats["completed"] == 1
+    # a leak is detected: simulate a lost reference
+    engine2 = ServeEngine(model, params, EngineConfig(slots=2, max_len=32))
+    engine2.blocks.allocator.alloc()
+    with pytest.raises(RuntimeError, match="leak"):
+        engine2.shutdown()
+
+
+def test_engine_has_no_layout_branching():
+    """The tentpole's acceptance criterion: both kv_layout values route
+    through the BlockManager -- no `if self.pooled:` forks left."""
+    import inspect
+    from repro.serve import engine as engine_mod
+    src = inspect.getsource(engine_mod)
+    assert "self.pooled" not in src
 
 
 def test_scheduler_completes_duplicate_uids(rng):

@@ -68,6 +68,31 @@ def test_speedup_up_to_16_tiles():
         assert emulation.slowdown(mix, "mesh", 1024, 16) < 1.0
 
 
+def test_fit_hot_set_kb_recovers_synthetic_trace():
+    """Calibration helper: traces generated from a known working-set
+    half-size must fit back to it (and access counts weight the fit)."""
+    import numpy as np
+    true_half = 48.0
+    traces = []
+    rng = np.random.default_rng(0)
+    for cap in (8.0, 16.0, 64.0, 256.0):
+        h = emulation.CacheConfig(cap, true_half).hit_rate()
+        total = int(rng.integers(5_000, 50_000))
+        traces.append({"capacity_kb": cap, "hits": round(h * total),
+                       "misses": total - round(h * total)})
+    fitted = emulation.fit_hot_set_kb(traces)
+    assert abs(fitted - true_half) / true_half < 0.02, fitted
+    # hit_rate-only traces work too; degenerate traces fall back to default
+    assert emulation.fit_hot_set_kb(
+        [{"capacity_kb": 64.0, "hit_rate": 0.5}]) == pytest.approx(64.0)
+    assert emulation.fit_hot_set_kb([]) == 64.0
+    assert emulation.fit_hot_set_kb(
+        [{"capacity_kb": 16.0, "hits": 0, "misses": 100}]) == 64.0
+    # the fitted config reproduces the measured hit rates
+    cfg = emulation.CacheConfig(16.0, emulation.fit_hot_set_kb(traces))
+    assert abs(cfg.hit_rate() - 16.0 / (16.0 + true_half)) < 0.01
+
+
 def test_dhrystone_less_efficient_than_compiler():
     d = emulation.slowdown(emulation.DHRYSTONE, "clos", 4096, 4096)
     c = emulation.slowdown(emulation.COMPILER, "clos", 4096, 4096)
