@@ -37,21 +37,26 @@ def main():
                       param_dtype="float32", compute_dtype="float32")
     model = Model(cfg)
     params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, EngineConfig(slots=slots, max_len=96))
-    sched = Scheduler(engine)
-    rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(0, 256, 8).astype(np.int32),
-                    max_new_tokens=12) for i in range(args.requests)]
-    sched.submit(reqs)
-    t0 = time.monotonic()
-    done = sched.run()
-    dt = time.monotonic() - t0
-    n_new = sum(len(r.output) for r in done)
-    print(f"kv_layout={cfg.kv_layout}: {len(done)} requests, {n_new} tokens "
-          f"in {dt:.1f}s ({n_new / dt:.1f} tok/s) {engine.pool_stats()}")
-    for r in done[:3]:
-        print(f"  req {r.uid}: {list(r.prompt[:4])}... -> {r.output}")
+    # the engine is a context manager: the shutdown leak detector (every KV
+    # frame refcount back to zero) runs even if the body raises
+    with ServeEngine(model, params,
+                     EngineConfig(slots=slots, max_len=96)) as engine:
+        sched = Scheduler(engine)
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, 256, 8).astype(np.int32),
+                        max_new_tokens=12) for i in range(args.requests)]
+        sched.submit(reqs)
+        t0 = time.monotonic()
+        done = sched.run()
+        dt = time.monotonic() - t0
+        n_new = sum(len(r.output) for r in done)
+        print(f"kv_layout={cfg.kv_layout}: {len(done)} requests, "
+              f"{n_new} tokens in {dt:.1f}s ({n_new / dt:.1f} tok/s) "
+              f"{engine.pool_stats()}")
+        for r in done[:3]:
+            print(f"  req {r.uid}: {list(r.prompt[:4])}... -> {r.output}")
+    print(f"shutdown: {engine.shutdown()}")
 
 
 if __name__ == "__main__":

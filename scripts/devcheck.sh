@@ -7,4 +7,17 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+# vm_bench smoke (incl. the swap/churn + retention workloads) must stay
+# inside the CI budget: allocator/engine/residency regressions crash it,
+# slowdowns fail the 30 s gate.
+SMOKE_BUDGET_S=30
+start=$(date +%s)
+python -m benchmarks.vm_bench --smoke
+elapsed=$(( $(date +%s) - start ))
+if [ "$elapsed" -gt "$SMOKE_BUDGET_S" ]; then
+    echo "vm_bench --smoke took ${elapsed}s (> ${SMOKE_BUDGET_S}s budget)" >&2
+    exit 1
+fi
+echo "vm_bench --smoke OK in ${elapsed}s (budget ${SMOKE_BUDGET_S}s)"

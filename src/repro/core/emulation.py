@@ -75,6 +75,38 @@ class CacheConfig:
         return self.capacity_kb / (self.capacity_kb + self.hot_set_half_kb)
 
 
+@dataclasses.dataclass(frozen=True)
+class HostTierConfig:
+    """A host-memory (CPU DRAM) tier one PCIe hop below the emulated pool.
+
+    Extends the §7.2 access model one level down the hierarchy, the same
+    move the paper makes one level up: pages evicted from the small
+    distributed memories live across PCIe, and an access that faults on a
+    host-resident page pays a *page-granular* round trip (latency plus two
+    page transfers -- the victim's write-back and the faulted page's read)
+    on top of the ordinary communication sequence.
+
+    ``host_frac`` is the fraction of cache-missing global accesses that
+    fault to host -- the swap/churn knob a workload measures (cf. the
+    serving engine's ``swap_out_pages`` / access counters).
+    """
+    pcie_gbps: float = 16.0          # effective per-direction bandwidth
+    pcie_latency_us: float = 2.0     # software + link round-trip latency
+    page_kb: float = 4.0             # swap granularity (one frame)
+    host_frac: float = 0.0           # misses served by a host-resident page
+
+    def __post_init__(self):
+        if not (0.0 <= self.host_frac <= 1.0):
+            raise ValueError("host_frac must be in [0, 1]")
+        if self.pcie_gbps <= 0.0:
+            raise ValueError("pcie_gbps must be positive")
+
+    def roundtrip_cycles(self, clock_ghz: float = P.CHIP.clock_ghz) -> float:
+        """Cycles to fault one page in (and one victim out) over PCIe."""
+        xfer_s = 2 * self.page_kb * 1024 / (self.pcie_gbps * 1e9)
+        return (self.pcie_latency_us * 1e-6 + xfer_s) * clock_ghz * 1e9
+
+
 def fit_hot_set_kb(traces) -> float:
     """Fit :attr:`CacheConfig.hot_set_half_kb` from measured cache traces.
 
@@ -136,15 +168,20 @@ class EmulationMachine:
 
     With a :class:`CacheConfig` the access model is cache-aware: a hit is a
     1-cycle local SRAM access, a miss pays the full communication sequence
-    (issue overhead + network round trip), weighted by the hit rate.
+    (issue overhead + network round trip), weighted by the hit rate.  With
+    a :class:`HostTierConfig` the model is additionally *residency-aware*:
+    a ``host_frac`` fraction of the misses fault on a page swapped out to
+    host memory and pay the page-granular PCIe round trip on top.
     """
 
     def __init__(self, sys: lat_mod.SystemConfig, emulation_tiles: int,
-                 cache: CacheConfig | None = None):
+                 cache: CacheConfig | None = None,
+                 host: HostTierConfig | None = None):
         self.sys = sys
         self.model = lat_mod.LatencyModel(sys)
         self.emulation_tiles = min(emulation_tiles, sys.n_tiles)
         self.cache = cache
+        self.host = host
 
     def global_access_cycles(self, mix: InstructionMix) -> float:
         rt = self.model.mean_access_latency(self.emulation_tiles)
@@ -152,6 +189,9 @@ class EmulationMachine:
                  + mix.load_frac * LOAD_EXTRA_INSTRS
                  + mix.store_frac * STORE_EXTRA_INSTRS)
         miss_cycles = issue + rt
+        if self.host is not None and self.host.host_frac > 0.0:
+            fault = self.host.roundtrip_cycles(P.CHIP.clock_ghz)
+            miss_cycles += self.host.host_frac * fault
         if self.cache is None:
             return miss_cycles
         h = self.cache.hit_rate()
@@ -165,7 +205,8 @@ class EmulationMachine:
 def slowdown(mix: InstructionMix, network: str, system_tiles: int,
              emulation_tiles: int, mem_kb: int = 256,
              dram_capacity_gb: int | None = None,
-             cache: CacheConfig | None = None) -> float:
+             cache: CacheConfig | None = None,
+             host: HostTierConfig | None = None) -> float:
     """Relative slowdown of the emulation vs the sequential machine (Fig. 10).
 
     The DRAM baseline capacity defaults to the capacity of the emulated
@@ -177,7 +218,7 @@ def slowdown(mix: InstructionMix, network: str, system_tiles: int,
     seq = SequentialMachine(dram=dram_mod.DRAMSystem(capacity_gb=dram_capacity_gb))
     par = EmulationMachine(
         lat_mod.SystemConfig(network=network, n_tiles=system_tiles, mem_kb=mem_kb),
-        emulation_tiles, cache=cache)
+        emulation_tiles, cache=cache, host=host)
     return par.cycles_per_instruction(mix) / seq.cycles_per_instruction(mix)
 
 
@@ -231,6 +272,46 @@ def fig_cache_sweep(system_tiles: int, emulation_tiles: int | None = None,
         out[net] = [slowdown(mix, net, system_tiles, emulation_tiles, mem_kb,
                              cache=c) for c in caches]
     return out
+
+
+def fig_swap_sweep(system_tiles: int, emulation_tiles: int | None = None,
+                   mem_kb: int = 256, mix: InstructionMix = DHRYSTONE,
+                   host_fracs: Sequence[float] = (0.0, 0.001, 0.005, 0.01,
+                                                  0.05, 0.1),
+                   host: HostTierConfig = HostTierConfig(),
+                   networks: tuple[str, ...] = ("clos", "mesh")) -> dict:
+    """Slowdown vs the fraction of misses faulting to the host tier (the
+    residency extension of the Fig. 10 family).
+
+    Returns ``{"host_frac": [...], "fault_cycles": c, "<net>": [...]}`` --
+    slowdown is monotone non-decreasing in ``host_frac`` by construction,
+    and the ``host_frac=0`` point reproduces the device-only model exactly
+    (the two-tier model embeds the one-tier one).
+    """
+    emulation_tiles = emulation_tiles or system_tiles
+    out: dict = {"host_frac": list(host_fracs),
+                 "fault_cycles": host.roundtrip_cycles(P.CHIP.clock_ghz)}
+    for net in networks:
+        out[net] = [
+            slowdown(mix, net, system_tiles, emulation_tiles, mem_kb,
+                     host=dataclasses.replace(host, host_frac=f))
+            for f in host_fracs]
+    return out
+
+
+def swap_break_even_accesses(host: HostTierConfig, rebuild_cycles: float,
+                             clock_ghz: float = P.CHIP.clock_ghz) -> float:
+    """Accesses per fault below which swapping beats recomputation.
+
+    A preempted sequence can either park its pages on host (each later
+    fault pays :meth:`HostTierConfig.roundtrip_cycles`) or drop them and
+    pay ``rebuild_cycles`` once to recompute the state (the serving
+    engine's re-prefill).  Swapping wins while
+    ``faults * roundtrip < rebuild``; the returned count is that threshold
+    -- large for KV-style state whose rebuild replays the whole prefix.
+    """
+    rt = host.roundtrip_cycles(clock_ghz)
+    return rebuild_cycles / rt if rt > 0 else float("inf")
 
 
 # ---------------------------------------------------------------------------

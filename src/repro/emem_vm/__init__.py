@@ -17,10 +17,16 @@ package adds the indirection that turns the emulation into a memory *system*:
     cache, and fall through to ``emem.read``/``emem.write`` on miss;
   * :mod:`repro.emem_vm.block_manager` -- refcounted sequence-level frame
     ownership (logical->frame block tables, prefix sharing, copy-on-write,
-    reserved vs on-demand allocation policies) for the serving engine.
+    reserved vs on-demand allocation policies) and tiered residency
+    (``FREE -> DEVICE -> HOST -> FREE``: swap-out/swap-in of preempted
+    sequences, bounded LRU retention of completed prompts' prefix pages)
+    for the serving engine.
 """
-from repro.emem_vm.allocator import FrameAllocator, OutOfFrames  # noqa: F401
-from repro.emem_vm.block_manager import BlockManager, CowCopy  # noqa: F401
+from repro.emem_vm.allocator import (FrameAllocator, OutOfFrames,  # noqa: F401
+                                     OutOfHostFrames, RES_DEVICE, RES_FREE,
+                                     RES_HOST)
+from repro.emem_vm.block_manager import (BlockManager, CowCopy,  # noqa: F401
+                                         PageIO)
 from repro.emem_vm.cache import CacheSpec, HotPageCache  # noqa: F401
 from repro.emem_vm.page_table import PROT_NONE, PROT_R, PROT_RW, PROT_W  # noqa: F401
 from repro.emem_vm.page_table import PageTable  # noqa: F401

@@ -14,6 +14,22 @@ owner lets go.  A frame with refcount > 1 is *shared* and must be treated as
 read-only by its owners (copy-on-write is the BlockManager's job).  A
 ``free`` of an already-free frame raises -- a double free would push the
 same frame onto the free list twice and hand it to two owners.
+
+Residency (the tiered frame lifecycle, ``FREE -> DEVICE -> HOST -> FREE``):
+
+  * **device frames** ``[0, n_frames)`` live in the emulated device memory;
+    ``alloc`` moves one FREE -> DEVICE, the last ``free`` DEVICE -> FREE.
+  * **host frames** ``[n_frames, n_frames + n_host_frames)`` are slots in a
+    host (CPU DRAM) backing store one PCIe hop below the pool.  They are a
+    *separate id space* -- a swapped-out page's contents move to a host
+    frame while its device frame returns to the free list, so swapping
+    genuinely frees device capacity.  ``alloc_host``/``free_host`` manage
+    them; refcounts are tracked in the same array.
+  * **pins** mark device frames that back *live* sequences (actively being
+    decoded into) and therefore must not be reclaimed.  A frame that is
+    allocated but unpinned -- e.g. held only by the prefix-retention pool --
+    is an *eviction candidate*: ``eviction_candidates()`` lists exactly the
+    frames a residency policy may reclaim under pool pressure.
 """
 from __future__ import annotations
 
@@ -21,24 +37,46 @@ import dataclasses
 
 import numpy as np
 
+#: Residency states of a frame id (see module docstring).
+RES_FREE = "free"
+RES_DEVICE = "device"
+RES_HOST = "host"
+
 
 class OutOfFrames(RuntimeError):
-    """The pool has no free frame left."""
+    """The device pool has no free frame left."""
+
+
+class OutOfHostFrames(RuntimeError):
+    """The host backing store has no free frame left."""
 
 
 @dataclasses.dataclass
 class FrameAllocator:
-    """LIFO free-list with per-frame refcounts over frames ``[0, n_frames)``."""
+    """LIFO free-list with per-frame refcounts over device frames
+    ``[0, n_frames)`` and host frames ``[n_frames, n_frames+n_host_frames)``.
+    """
     n_frames: int
+    n_host_frames: int = 0
 
     def __post_init__(self):
         if self.n_frames <= 0:
             raise ValueError("n_frames must be positive")
+        if self.n_host_frames < 0:
+            raise ValueError("n_host_frames must be >= 0")
         self._free: list[int] = list(range(self.n_frames - 1, -1, -1))
-        self._refs = np.zeros(self.n_frames, np.int32)
+        self._free_host: list[int] = list(
+            range(self.n_frames + self.n_host_frames - 1, self.n_frames - 1,
+                  -1))
+        total = self.n_frames + self.n_host_frames
+        self._refs = np.zeros(total, np.int32)
+        #: pin count per frame: >0 means a live sequence is decoding into it
+        #: (never an eviction candidate).  Host frames are never pinned.
+        self._pins = np.zeros(total, np.int32)
 
     # -- alloc / ref / free ---------------------------------------------------
     def alloc(self) -> int:
+        """FREE -> DEVICE: hand out a device frame at refcount 1."""
         if not self._free:
             raise OutOfFrames(f"all {self.n_frames} frames allocated")
         f = self._free.pop()
@@ -50,6 +88,15 @@ class FrameAllocator:
             raise OutOfFrames(
                 f"requested {n} frames, only {len(self._free)} free")
         return [self.alloc() for _ in range(n)]
+
+    def alloc_host(self) -> int:
+        """FREE -> HOST: hand out a host backing-store frame at refcount 1."""
+        if not self._free_host:
+            raise OutOfHostFrames(
+                f"all {self.n_host_frames} host frames allocated")
+        f = self._free_host.pop()
+        self._refs[f] = 1
+        return f
 
     def ref(self, frame: int) -> int:
         """Add an owner to a live frame; returns the new refcount."""
@@ -67,26 +114,77 @@ class FrameAllocator:
         return self.refcount(frame) > 1
 
     def free(self, frame: int) -> None:
-        """Drop one reference; the frame returns to the free list only when
-        the last owner drops it.  Freeing an already-free frame raises (a
-        double free would hand the same frame to two owners)."""
+        """Drop one reference; the frame returns to its free list only when
+        the last owner drops it (DEVICE/HOST -> FREE).  Freeing an
+        already-free frame raises (a double free would hand the same frame
+        to two owners), as does dropping the last reference to a frame
+        still pinned (a live sequence is decoding into it -- recycling it
+        would silently corrupt that sequence's pages)."""
         self._check_range(frame)
         if self._refs[frame] <= 0:
             raise ValueError(f"double free of frame {frame}")
+        if self._refs[frame] == 1 and self._pins[frame] > 0:
+            raise ValueError(f"free of pinned frame {frame}")
         self._refs[frame] -= 1
         if self._refs[frame] == 0:
-            self._free.append(frame)
+            if frame >= self.n_frames:
+                self._free_host.append(frame)
+            else:
+                self._free.append(frame)
 
     #: ``deref`` is the refcount-flavored name for the same operation.
     deref = free
+
+    #: ``free_host`` too -- host frames share the refcount array.
+    free_host = free
 
     def bulk_free(self, frames) -> None:
         for f in frames:
             self.free(int(f))
 
     def _check_range(self, frame: int) -> None:
-        if not (0 <= frame < self.n_frames):
+        if not (0 <= frame < self.n_frames + self.n_host_frames):
             raise ValueError(f"frame {frame} out of range")
+
+    # -- residency / eviction candidates --------------------------------------
+    def is_host_frame(self, frame: int) -> bool:
+        self._check_range(frame)
+        return frame >= self.n_frames
+
+    def residency(self, frame: int) -> str:
+        """One of :data:`RES_FREE` / :data:`RES_DEVICE` / :data:`RES_HOST`."""
+        self._check_range(frame)
+        if self._refs[frame] <= 0:
+            return RES_FREE
+        return RES_HOST if frame >= self.n_frames else RES_DEVICE
+
+    def pin(self, frame: int) -> None:
+        """Mark a device frame as backing a live sequence (not evictable)."""
+        self._check_range(frame)
+        if frame >= self.n_frames:
+            raise ValueError(f"host frame {frame} cannot be pinned")
+        if self._refs[frame] <= 0:
+            raise ValueError(f"pin of free frame {frame}")
+        self._pins[frame] += 1
+
+    def unpin(self, frame: int) -> None:
+        self._check_range(frame)
+        if self._pins[frame] <= 0:
+            raise ValueError(f"unpin of unpinned frame {frame}")
+        self._pins[frame] -= 1
+
+    def pin_count(self, frame: int) -> int:
+        self._check_range(frame)
+        return int(self._pins[frame])
+
+    def eviction_candidates(self) -> list[int]:
+        """Device frames that are allocated but unpinned -- held only by
+        passive owners (e.g. the prefix-retention pool), reclaimable by a
+        residency policy under pool pressure."""
+        dev = np.arange(self.n_frames)
+        mask = (self._refs[:self.n_frames] > 0) & \
+            (self._pins[:self.n_frames] == 0)
+        return [int(f) for f in dev[mask]]
 
     # -- stats ----------------------------------------------------------------
     def free_count(self) -> int:
@@ -95,13 +193,19 @@ class FrameAllocator:
     def used_count(self) -> int:
         return self.n_frames - len(self._free)
 
+    def host_free_count(self) -> int:
+        return len(self._free_host)
+
+    def host_used_count(self) -> int:
+        return self.n_host_frames - len(self._free_host)
+
     def shared_count(self) -> int:
         """Frames currently owned by more than one sequence."""
-        return int((self._refs > 1).sum())
+        return int((self._refs[:self.n_frames] > 1).sum())
 
     def shared_mask(self) -> np.ndarray:
         """Boolean [n_frames]: refcount > 1 (read-only to every owner)."""
-        return self._refs > 1
+        return self._refs[:self.n_frames] > 1
 
     def occupancy(self) -> float:
         return self.used_count() / self.n_frames
@@ -116,7 +220,7 @@ class FrameAllocator:
         n_free = len(self._free)
         if n_free == 0:
             return 0.0
-        free_mask = self._refs == 0
+        free_mask = self._refs[:self.n_frames] == 0
         best = run = 0
         for bit in free_mask:
             run = run + 1 if bit else 0
@@ -129,6 +233,9 @@ class FrameAllocator:
             "free": self.free_count(),
             "used": self.used_count(),
             "shared": self.shared_count(),
+            "host_frames": self.n_host_frames,
+            "host_used": self.host_used_count(),
+            "evictable": len(self.eviction_candidates()),
             "occupancy": self.occupancy(),
             "fragmentation": self.fragmentation(),
         }

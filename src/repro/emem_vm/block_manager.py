@@ -1,10 +1,11 @@
-"""BlockManager: refcounted ownership of KV frames for every sequence.
+"""BlockManager: refcounted ownership + tiered residency of KV frames.
 
 The third layer of the memory stack.  :mod:`repro.core.emem` is the
 *physical* emulation (address -> owner is arithmetic), :mod:`repro.emem_vm`
 adds *virtual* addressing (page table + allocator + hot-page cache), and
 this module owns the *sequence* level: which logical page of which sequence
-lives in which physical frame, and who else is allowed to read it.
+lives in which physical frame, who else is allowed to read it, and -- since
+the residency refactor -- which tier it currently occupies.
 
 Every serving sequence -- whatever the engine's ``kv_layout`` -- goes
 through one logical->frame block table here.  The two layouts are just
@@ -15,18 +16,31 @@ allocation policies:
     Admission never allocates, completion never frees; the table is static
     and reproduces the fixed slots x max_pages layout exactly.
   * ``policy="on_demand"`` (``kv_layout="pooled"``): frames come from the
-    shared pool as a sequence grows and return when it completes.  On top
-    of the indirection this policy implements the two ROADMAP items that
-    need per-frame refcounts:
+    shared pool as a sequence grows and return when it completes, with
+    prefix sharing (admission matches new prompts against live prompts and
+    the retention pool; covered pages are shared refcount++ instead of
+    recomputed) and copy-on-write (`CowCopy` records tell the engine which
+    device pages to copy on the first divergent write).
 
-      - **prefix sharing**: admission matches the new prompt against the
-        prompts of live sequences; pages fully or partially covered by the
-        longest common prefix are *shared* (refcount++) instead of
-        recomputed, and prefill resumes after the shared tokens;
-      - **copy-on-write**: the first write a sequence makes at a position
-        not covered by its shared prefix, into a frame someone else still
-        references, allocates a private frame and copies the page
-        (`CowCopy` records tell the engine which device pages to copy).
+**Residency state machine** (``FREE -> DEVICE -> HOST -> FREE``), on-demand
+policy only:
+
+  * :meth:`evict_seq` moves every frame a sequence holds to the host
+    backing store -- the engine's page-IO callback reads the device pages,
+    the payloads are parked in host frames (a separate id space in the
+    :class:`FrameAllocator`), and the device frames return to the pool.
+    Shared prefix frames are snapshotted too (the copy is taken *before*
+    the deref, so eviction is safe whether or not other owners remain).
+  * :meth:`restore_seq` is the inverse: fresh device frames are allocated,
+    the host payloads written back through the page-IO callback, and the
+    block table rebuilt.  Preemption + restore therefore trades prefill
+    FLOPs for PCIe bytes -- resume is a swap-in, not a recompute.
+  * the **retention pool** keeps completed prompts' prefix pages alive in a
+    bounded LRU (:attr:`retain_frames` device frames max) so a system
+    prompt survives idle gaps between requests.  Retained frames hold a
+    refcount but no *pin*, which makes them the allocator's eviction
+    candidates: pool pressure reclaims them LRU-first before any live
+    sequence is preempted.
 
 Shared frames are read-only to every owner: ``frame_ro()`` exports the
 refcount>1 bit, which rides in ``cache["vm"]`` into the paged-attention
@@ -34,15 +48,21 @@ kernel where writes to shared frames are dropped (defense in depth -- the
 engine resolves COW host-side *before* the decode step that writes).
 
 All state is host-side numpy (control plane); the data plane only ever sees
-the exported tables.
+the exported tables.  The page payloads moved by evict/restore are opaque to
+this module -- the engine's :class:`PageIO` callbacks read and write the
+actual device pages, so the BlockManager never learns the model's cache
+layout.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.emem_vm.allocator import FrameAllocator, OutOfFrames  # noqa: F401
+from repro.emem_vm.allocator import (FrameAllocator, OutOfFrames,  # noqa: F401
+                                     OutOfHostFrames)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,10 +73,39 @@ class CowCopy:
     dst: int
 
 
+@dataclasses.dataclass
+class PageIO:
+    """Engine-provided callbacks that move page contents across the tiers.
+
+    ``read(frames)`` returns one opaque payload per device frame (the
+    engine snapshots every attention layer's k/v page rows as numpy);
+    ``write(assignments)`` applies ``[(frame, payload), ...]`` back onto the
+    device pages.  The BlockManager decides *when* pages move; the engine
+    decides *what* a page physically is."""
+    read: Callable[[Sequence[int]], list]
+    write: Callable[[Sequence[tuple]], None]
+
+
+@dataclasses.dataclass
+class _SwapRecord:
+    """A preempted sequence's pages parked on host, keyed by engine tag.
+    (Resume length and the pending token live in the engine's per-request
+    resume record -- this side only owns the page payloads.)"""
+    pages: list          # [(lpage, host_frame), ...] in lpage order
+
+
+@dataclasses.dataclass
+class _RetainEntry:
+    """A completed prompt's prefix pages kept alive for future admissions."""
+    tokens: np.ndarray   # the prompt whose KV the pages hold
+    pages: list          # [(lpage, device_frame), ...]
+
+
 class BlockManager:
     def __init__(self, n_frames: int, n_seqs: int, max_lpages: int,
                  page_slots: int, policy: str = "on_demand",
-                 share_prefixes: bool = False):
+                 share_prefixes: bool = False, n_host_frames: int | None = None,
+                 retain_frames: int = 0, swap_enabled: bool = True):
         if policy not in ("reserved", "on_demand"):
             raise ValueError(f"unknown policy {policy!r}")
         if policy == "reserved" and n_frames < n_seqs * max_lpages:
@@ -69,15 +118,40 @@ class BlockManager:
         self.page_slots = page_slots
         self.policy = policy
         self.share_prefixes = share_prefixes and policy == "on_demand"
-        self.allocator = FrameAllocator(n_frames)
+        #: host tier sizing: default one host frame per device frame
+        if n_host_frames is None:
+            n_host_frames = n_frames if policy == "on_demand" else 0
+        self.swap_enabled = swap_enabled and policy == "on_demand"
+        #: retention rides on the prefix-matching machinery, so it only
+        #: engages while ``share_prefixes`` is on (checked at use time, not
+        #: latched -- callers may toggle sharing after construction)
+        self.retain_frames = retain_frames if policy == "on_demand" else 0
+        self.allocator = FrameAllocator(n_frames, n_host_frames)
         self.block_table = np.full((n_seqs, max_lpages), -1, np.int32)
         self.frame_lpage = np.zeros(n_frames, np.int32)
         #: positions < shared_len[seq] are backed by valid shared prefix KV
         #: (writes there are idempotent re-runs and may be dropped)
         self.shared_len = np.zeros(n_seqs, np.int64)
         self._prompts: dict[int, np.ndarray] = {}   # live seq -> prompt toks
+        #: engine-tag -> host-parked pages of a preempted sequence
+        self._swapped: dict[int, _SwapRecord] = {}
+        #: opaque host payloads, one per allocated host frame
+        self._host_payloads: dict[int, object] = {}
+        #: bounded LRU of completed prompts' prefix pages (key -> entry)
+        self._retained: collections.OrderedDict[int, _RetainEntry] = \
+            collections.OrderedDict()
+        self._retain_key = 0
+        #: set by the engine; None disables evict/restore (recompute path)
+        self.page_io: PageIO | None = None
+        #: (seq, lpage) pairs allocated ahead of the boundary token
+        self._prefetched: set[tuple[int, int]] = set()
         self.counters = {"cow_copies": 0, "shared_frames": 0,
-                         "shared_tokens": 0, "allocs": 0, "frees": 0}
+                         "shared_tokens": 0, "allocs": 0, "frees": 0,
+                         "swap_out_pages": 0, "swap_in_pages": 0,
+                         "seq_swaps": 0, "seq_restores": 0,
+                         "retained_hits": 0, "retained_tokens": 0,
+                         "retained_reclaimed": 0,
+                         "prefetch_allocs": 0, "prefetch_hits": 0}
         #: set whenever the exported tables changed; the engine reads it to
         #: decide when to re-push ``cache["vm"]`` (and clears it after)
         self.dirty = True
@@ -88,47 +162,142 @@ class BlockManager:
                     self.block_table[s, lp] = f
                     self.frame_lpage[f] = lp
 
+    # -- allocation with retention-pool reclaim --------------------------------
+    def _alloc_frame(self) -> int:
+        """Allocate a device frame, reclaiming LRU retained entries under
+        pool pressure before giving up (live sequences always outrank the
+        retention pool)."""
+        while True:
+            try:
+                f = self.allocator.alloc()
+                self.counters["allocs"] += 1
+                return f
+            except OutOfFrames:
+                if not self._reclaim_retained():
+                    raise
+
+    def _reclaim_retained(self, want: int = 1) -> int:
+        """Drop least-recently-used retention entries until ``want`` device
+        frames were actually freed.  An entry whose every frame is still
+        shared with a live sequence would free nothing -- it is skipped,
+        not destroyed, so pool pressure cannot wipe out retained prefixes
+        for zero capacity gain.  Returns the number freed."""
+        freed = 0
+        while freed < want and self._reclaimable() > 0:
+            # prefer the oldest entry that frees something on its own; fall
+            # back to plain LRU for frames shared ACROSS entries, which only
+            # free once every holding entry is gone
+            key = next((k for k, e in self._retained.items()
+                        if self._entry_freeable(e) > 0),
+                       next(iter(self._retained)))
+            freed += self._drop_entry(self._retained.pop(key))
+            self.counters["retained_reclaimed"] += 1
+        return freed
+
+    def _entry_freeable(self, entry: _RetainEntry) -> int:
+        """Device frames dropping this entry would actually free."""
+        counts: dict[int, int] = {}
+        for _, f in entry.pages:
+            counts[f] = counts.get(f, 0) + 1
+        return sum(1 for f, n in counts.items()
+                   if self.allocator.refcount(f) == n
+                   and self.allocator.pin_count(f) == 0)
+
+    def _drop_entry(self, entry: _RetainEntry) -> int:
+        freed = 0
+        for _, f in entry.pages:
+            before = self.allocator.refcount(f)
+            self.allocator.deref(f)
+            self.counters["frees"] += 1
+            freed += int(before == 1)
+        self.dirty = True
+        return freed
+
+    def _reclaimable(self, exclude_key: int | None = None) -> int:
+        """Device frames the retention pool would free if fully drained.
+
+        ``exclude_key`` names a retained entry the caller intends to SHARE
+        from -- its pages must stay resident, so they are not headroom (an
+        admission must not count the same frame both as an already-present
+        prefix page and as drainable slack)."""
+        counts: dict[int, int] = {}
+        for key, entry in self._retained.items():
+            if key == exclude_key:
+                continue
+            for _, f in entry.pages:
+                counts[f] = counts.get(f, 0) + 1
+        return sum(1 for f, n in counts.items()
+                   if self.allocator.refcount(f) == n
+                   and self.allocator.pin_count(f) == 0)
+
     # -- admission accounting -------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 1) // self.page_slots)
 
-    def _match_prefix(self, tokens: np.ndarray) -> tuple[int, int]:
-        """Longest common prefix with a live sequence's prompt.
+    def _match_prefix(self, tokens: np.ndarray):
+        """Longest common prefix with a retained prompt or a live sequence's
+        prompt.  The retention pool is consulted first; a live donor only
+        wins with a strictly longer match.
 
-        Returns (match_len, donor_seq); (0, -1) when sharing is off or
-        nothing matches."""
+        Returns (match_len, donor) where donor is ("pool", key) or
+        ("live", seq); (0, None) when sharing is off or nothing matches."""
         if not self.share_prefixes or len(tokens) == 0:
-            return 0, -1
-        best, donor = 0, -1
-        for seq, p in self._prompts.items():
+            return 0, None
+        best, donor = 0, None
+
+        def common(p):
             m = min(len(p), len(tokens))
             if m <= best:
-                continue
+                return 0
             eq = p[:m] == tokens[:m]
-            common = m if eq.all() else int(np.argmin(eq))
-            if common > best:
-                best, donor = common, seq
+            return m if eq.all() else int(np.argmin(eq))
+
+        for key, entry in self._retained.items():
+            c = common(entry.tokens)
+            if c > best:
+                best, donor = c, ("pool", key)
+        for seq, p in self._prompts.items():
+            c = common(p)
+            if c > best:
+                best, donor = c, ("live", seq)
         return best, donor
 
-    def admit_frames_needed(self, tokens: np.ndarray) -> int:
-        """Frames the prefill of ``tokens`` will allocate (after sharing)."""
+    def _admit_need(self, tokens: np.ndarray, tag: int | None):
+        """(frames needed, retained entry the admission would share from)."""
         if self.policy == "reserved":
-            return 0
+            return 0, None
+        if tag is not None and tag in self._swapped:
+            return len(self._swapped[tag].pages), None
         n = max(len(tokens), 1)
-        match, _ = self._match_prefix(np.asarray(tokens))
+        match, donor = self._match_prefix(np.asarray(tokens))
+        pool_key = donor[1] if donor is not None and donor[0] == "pool" \
+            else None
         if n <= match:
-            return 0                    # whole prompt shared: re-run only
-        return self.pages_for(n) - match // self.page_slots
+            return 0, pool_key          # whole prompt shared: re-run only
+        return self.pages_for(n) - match // self.page_slots, pool_key
 
-    def can_admit(self, tokens: np.ndarray) -> bool:
-        return (self.admit_frames_needed(tokens)
-                <= self.allocator.free_count())
+    def admit_frames_needed(self, tokens: np.ndarray,
+                            tag: int | None = None) -> int:
+        """Frames the admission of ``tokens`` will allocate: the pages a
+        prefill needs after prefix sharing, or -- for a swapped-out request
+        identified by ``tag`` -- the pages its restore will swap back in."""
+        return self._admit_need(tokens, tag)[0]
+
+    def can_admit(self, tokens: np.ndarray, tag: int | None = None) -> bool:
+        """Admission check: free frames plus what draining the retention
+        pool would free must cover the request's immediate need.  A
+        retained entry the prefix match would share from is NOT drainable
+        headroom -- its pages have to stay resident to be shared."""
+        need, pool_key = self._admit_need(tokens, tag)
+        return need <= (self.allocator.free_count()
+                        + self._reclaimable(exclude_key=pool_key))
 
     # -- sequence lifecycle ---------------------------------------------------
     def begin_seq(self, seq: int, tokens: np.ndarray) -> int:
         """Register ``seq`` with prompt ``tokens``; share any common-prefix
-        frames with a live donor.  Returns the number of leading prompt
-        tokens whose KV is already present (prefill may resume after them).
+        frames with a retained entry or a live donor.  Returns the number of
+        leading prompt tokens whose KV is already present (prefill may
+        resume after them).
         """
         tokens = np.asarray(tokens, np.int32).ravel()
         if self.policy == "reserved":
@@ -139,12 +308,24 @@ class BlockManager:
         match, donor = self._match_prefix(tokens)
         ps = self.page_slots
         n_pages = match // ps + (1 if match % ps else 0)
-        for lp in range(n_pages):
-            f = int(self.block_table[donor, lp])
-            assert f >= 0, (donor, lp)
-            self.allocator.ref(f)
-            self.block_table[seq, lp] = f
-            self.counters["shared_frames"] += 1
+        if donor is not None and n_pages:
+            kind, key = donor
+            if kind == "pool":
+                entry = self._retained[key]
+                self._retained.move_to_end(key)
+                frames = dict(entry.pages)
+                self.counters["retained_hits"] += 1
+                self.counters["retained_tokens"] += match
+            else:
+                frames = {lp: int(self.block_table[key, lp])
+                          for lp in range(n_pages)}
+            for lp in range(n_pages):
+                f = frames[lp]
+                assert f >= 0, (donor, lp)
+                self.allocator.ref(f)
+                self.allocator.pin(f)
+                self.block_table[seq, lp] = f
+                self.counters["shared_frames"] += 1
         self.shared_len[seq] = match
         self.counters["shared_tokens"] += match
         if self.share_prefixes:
@@ -157,22 +338,27 @@ class BlockManager:
         Allocates the frame if the logical page is unmapped; copy-on-writes
         it if the page is shared and ``pos`` diverges from the shared prefix
         (first divergent write).  May raise :class:`OutOfFrames` -- state is
-        untouched in that case so the caller can preempt and retry.  Returns
+        untouched in that case so the caller can preempt and retry (the
+        retention pool is reclaimed LRU-first before the raise).  Returns
         the device page copies the caller must apply before decoding.
         """
         lp = pos // self.page_slots
         assert 0 <= lp < self.max_lpages, (seq, pos, lp)
         f = int(self.block_table[seq, lp])
         if f < 0:
-            nf = self.allocator.alloc()
-            self.counters["allocs"] += 1
+            nf = self._alloc_frame()
+            self.allocator.pin(nf)
             self.block_table[seq, lp] = nf
             self.frame_lpage[nf] = lp
             self.dirty = True
             return []
+        if (seq, lp) in self._prefetched:
+            self._prefetched.discard((seq, lp))
+            self.counters["prefetch_hits"] += 1
         if pos >= int(self.shared_len[seq]) and self.allocator.is_shared(f):
-            nf = self.allocator.alloc()          # raises before any mutation
-            self.counters["allocs"] += 1
+            nf = self._alloc_frame()             # raises before any mutation
+            self.allocator.pin(nf)
+            self.allocator.unpin(f)
             self.allocator.deref(f)
             self.block_table[seq, lp] = nf
             self.frame_lpage[nf] = lp
@@ -181,19 +367,201 @@ class BlockManager:
             return [CowCopy(src=f, dst=nf)]
         return []
 
-    def free_seq(self, seq: int) -> None:
+    def prefetch(self, seq: int, length: int) -> bool:
+        """Async next-page prefetch: called after the token at ``length - 1``
+        was scheduled, allocates the ``length // page_slots`` frame one
+        token *before* the boundary write would fault it in.  Opportunistic:
+        pool pressure (or an already-mapped page) makes it a no-op -- the
+        retention pool is never reclaimed for a speculative page, and a
+        prefetch never takes the frames live sequences' *mandatory* growth
+        may need this step (headroom gate: one frame per live sequence
+        stays untouched, so a prefetch cannot be the reason a sequence gets
+        preempted).  Returns True when a frame was pre-allocated."""
+        if self.policy == "reserved":
+            return False
+        nxt = length                       # position the NEXT token writes
+        if nxt >= self.max_lpages * self.page_slots or nxt % self.page_slots:
+            return False                   # not one-before-a-boundary
+        lp = nxt // self.page_slots
+        if self.block_table[seq, lp] >= 0:
+            return False
+        live = int((self.block_table >= 0).any(axis=1).sum())
+        if self.allocator.free_count() <= live:
+            return False                   # leave mandatory-growth headroom
+        try:
+            nf = self.allocator.alloc()    # no retention reclaim: speculative
+        except OutOfFrames:
+            return False
+        self.counters["allocs"] += 1
+        self.counters["prefetch_allocs"] += 1
+        self.allocator.pin(nf)
+        self.block_table[seq, lp] = nf
+        self.frame_lpage[nf] = lp
+        self._prefetched.add((seq, lp))
+        self.dirty = True
+        return True
+
+    # -- residency: preemption swap-out / resume swap-in ----------------------
+    def evict_seq(self, seq: int, tag: int) -> int | None:
+        """DEVICE -> HOST: park every frame ``seq`` holds in the host
+        backing store under ``tag`` and release the device frames.
+
+        Returns the number of pages swapped out, or None when swapping is
+        unavailable (reserved policy, swapping disabled, no page-IO bound,
+        or the host store cannot hold the pages) -- the caller falls back to
+        the recompute-preemption path.  Shared prefix frames are snapshotted
+        before the deref, so the record is self-contained even if every
+        other owner disappears before the restore."""
+        if (self.policy == "reserved" or not self.swap_enabled
+                or self.page_io is None or tag in self._swapped):
+            return None
+        row = self.block_table[seq]
+        lpages = [lp for lp in range(self.max_lpages) if row[lp] >= 0]
+        if len(lpages) > self.allocator.host_free_count():
+            return None                     # host store full: recompute
+        frames = [int(row[lp]) for lp in lpages]
+        payloads = self.page_io.read(frames)
+        pages = []
+        for lp, f, payload in zip(lpages, frames, payloads):
+            hf = self.allocator.alloc_host()
+            self._host_payloads[hf] = payload
+            pages.append((lp, hf))
+            self.allocator.unpin(f)
+            self.allocator.deref(f)
+            self.counters["frees"] += 1
+        self._swapped[tag] = _SwapRecord(pages=pages)
+        self._prompts.pop(seq, None)
+        self._prefetched = {(s, lp) for s, lp in self._prefetched if s != seq}
+        self.block_table[seq] = -1
+        self.shared_len[seq] = 0
+        self.counters["seq_swaps"] += 1
+        self.counters["swap_out_pages"] += len(pages)
+        self.dirty = True
+        return len(pages)
+
+    def has_swap(self, tag: int | None) -> bool:
+        return tag is not None and tag in self._swapped
+
+    def restore_seq(self, seq: int, tag: int, tokens=None) -> int:
+        """HOST -> DEVICE: rebuild ``seq``'s block table from the swap
+        record ``tag``, writing the parked payloads back into fresh device
+        frames through the page-IO callback.  Raises :class:`OutOfFrames`
+        (after reclaiming the retention pool) if the device pool cannot hold
+        the pages; the record is left intact in that case.  Returns the
+        number of pages swapped back in."""
+        rec = self._swapped[tag]
+        need = len(rec.pages)
+        if need > self.allocator.free_count():
+            self._reclaim_retained(need - self.allocator.free_count())
+        if need > self.allocator.free_count():
+            raise OutOfFrames(
+                f"restore of {need} pages, {self.allocator.free_count()} "
+                f"free")
+        assert (self.block_table[seq] < 0).all(), f"seq {seq} already mapped"
+        assignments = []
+        for lp, hf in rec.pages:
+            f = self._alloc_frame()
+            self.allocator.pin(f)
+            self.block_table[seq, lp] = f
+            self.frame_lpage[f] = lp
+            assignments.append((f, self._host_payloads.pop(hf)))
+            self.allocator.free_host(hf)
+        self.page_io.write(assignments)
+        del self._swapped[tag]
+        self.shared_len[seq] = 0            # every restored frame is private
+        if self.share_prefixes and tokens is not None and len(tokens):
+            self._prompts[seq] = np.asarray(tokens, np.int32).ravel().copy()
+        self.counters["seq_restores"] += 1
+        self.counters["swap_in_pages"] += len(rec.pages)
+        self.dirty = True
+        return len(rec.pages)
+
+    def drop_swap(self, tag: int) -> None:
+        """Discard a swap record (request cancelled / completed elsewhere):
+        host frames return to the pool, payloads are dropped."""
+        rec = self._swapped.pop(tag, None)
+        if rec is None:
+            return
+        for _, hf in rec.pages:
+            self._host_payloads.pop(hf, None)
+            self.allocator.free_host(hf)
+
+    # -- completion / retention ------------------------------------------------
+    def release_seq(self, seq: int, completed: bool = False) -> None:
         """Drop every reference ``seq`` holds (no-op under ``reserved`` --
-        the static tables ARE the reservation)."""
+        the static tables ARE the reservation).  On completion with
+        retention enabled, the pages covering the prompt transfer to the
+        bounded LRU retention pool instead of being freed, so the next
+        request with the same prefix skips their prefill."""
         if self.policy == "reserved":
             return
         self.dirty = True
-        self._prompts.pop(seq, None)
+        prompt = self._prompts.pop(seq, None)
+        self._prefetched = {(s, lp) for s, lp in self._prefetched if s != seq}
         row = self.block_table[seq]
-        for f in row[row >= 0]:
-            self.allocator.deref(int(f))
+        keep: dict[int, int] = {}
+        if (completed and self.share_prefixes and self.retain_frames > 0
+                and prompt is not None and len(prompt)):
+            n_keep = self.pages_for(len(prompt))
+            keep = {lp: int(row[lp]) for lp in range(n_keep) if row[lp] >= 0}
+        for lp in range(self.max_lpages):
+            f = int(row[lp])
+            if f < 0:
+                continue
+            self.allocator.unpin(f)
+            if lp in keep:
+                continue                    # ref transfers to the pool
+            self.allocator.deref(f)
             self.counters["frees"] += 1
+        if keep:
+            self._retain(prompt, sorted(keep.items()))
         self.block_table[seq] = -1
         self.shared_len[seq] = 0
+
+    #: pre-residency name for the release path (completion semantics were
+    #: implicit before; plain frees, no retention)
+    def free_seq(self, seq: int) -> None:
+        self.release_seq(seq, completed=False)
+
+    def _retain(self, prompt: np.ndarray, pages: list) -> None:
+        """Insert a completed prompt's pages into the LRU retention pool,
+        deduplicating identical prompts and enforcing the frame budget.  A
+        prompt that alone exceeds the budget is rejected up front -- it
+        must not flush every smaller (and still useful) entry first."""
+        if len(pages) > self.retain_frames:
+            for _, f in pages:
+                self.allocator.deref(f)
+                self.counters["frees"] += 1
+            self.dirty = True
+            return
+        for key, entry in self._retained.items():
+            if len(entry.tokens) == len(prompt) and \
+                    bool((entry.tokens == prompt).all()):
+                # same prompt already retained: keep the existing entry (its
+                # frames are the shared ones), drop the new refs
+                self._retained.move_to_end(key)
+                for _, f in pages:
+                    self.allocator.deref(f)
+                    self.counters["frees"] += 1
+                return
+        self._retain_key += 1
+        self._retained[self._retain_key] = _RetainEntry(
+            tokens=prompt.copy(), pages=pages)
+        total = sum(len(e.pages) for e in self._retained.values())
+        while total > self.retain_frames:
+            _, old = self._retained.popitem(last=False)
+            total -= len(old.pages)
+            self._drop_entry(old)
+            self.counters["retained_reclaimed"] += 1
+
+    def drain_retained(self) -> int:
+        """Release every retention-pool reference; returns entries dropped
+        (shutdown: a drained pool counts as zero leaked frames)."""
+        n = len(self._retained)
+        while self._retained:
+            _, entry = self._retained.popitem(last=False)
+            self._drop_entry(entry)
+        return n
 
     # -- exported tables (ride in cache["vm"] into the kernel) ----------------
     def frame_ro(self) -> np.ndarray:
@@ -214,10 +582,15 @@ class BlockManager:
 
     def stats(self) -> dict:
         return {**self.allocator.stats(), **self.counters,
-                "policy": self.policy, "live_seqs": len(self._prompts)}
+                "policy": self.policy, "live_seqs": len(self._prompts),
+                "retained_entries": len(self._retained),
+                "retained_frames": sum(len(e.pages)
+                                       for e in self._retained.values()),
+                "swapped_seqs": len(self._swapped)}
 
     def shutdown(self) -> int:
-        """Release the reserved-policy reservation and report the number of
+        """Release the reserved-policy reservation, drain the retention pool
+        and any unclaimed swap records, and report the number of device
         frames still referenced (the leak count -- 0 iff every sequence was
         released)."""
         if self.policy == "reserved":
@@ -227,4 +600,7 @@ class BlockManager:
                     if f >= 0:
                         self.allocator.deref(f)
             self.block_table[:] = -1
+        self.drain_retained()
+        for tag in list(self._swapped):
+            self.drop_swap(tag)
         return self.allocator.used_count()

@@ -5,16 +5,25 @@ One page-table entry (PTE) per logical (virtual) page, packed into an int32:
     bits  0..23  physical frame index (16M frames max)
     bit   24     readable
     bit   25     writable
-    bit   26     valid (mapped)
+    bit   26     valid (mapped AND device-resident)
+    bit   27     swapped (mapped but resident on HOST, not on device)
 
 The entry array is laid out exactly like a small EMem -- ``[n_pt_pages,
 pt_slots, 1]`` int32, padded to a whole number of pages -- so the table
 *itself* can be distributed with :func:`repro.core.emem.sharding_for` over
 the same mesh axes as the memory it describes (:meth:`PageTable.emem_spec`).
 
-Mutation (``map``/``unmap``/``protect``) is control-plane and happens on a
-host mirror; translation (:func:`translate`) is the data-plane half -- pure
-``jnp`` over a flat entries array, batched and jittable.
+Mutation (``map``/``unmap``/``protect``/``mark_swapped``/``restore``) is
+control-plane and happens on a host mirror; translation (:func:`translate`)
+is the data-plane half -- pure ``jnp`` over a flat entries array, batched
+and jittable.
+
+Residency semantics: the valid bit means *device-resident*.  A swapped-out
+page keeps its protection bits but drops valid and gains the swapped bit --
+"invalid but mapped" -- so data-plane accesses are dropped exactly like an
+unmapped page's would be, while the control plane (:class:`repro.emem_vm.vm
+.EMemVM`) can distinguish "never mapped" (drop) from "on host" (fault the
+page back in, then retry the access).
 """
 from __future__ import annotations
 
@@ -33,9 +42,11 @@ _FRAME_MASK = (1 << 24) - 1
 _R_BIT = 1 << 24
 _W_BIT = 1 << 25
 _VALID_BIT = 1 << 26
+_SWAPPED_BIT = 1 << 27
 
 
-def pack_pte(frame: int, prot: int = PROT_RW, valid: bool = True) -> int:
+def pack_pte(frame: int, prot: int = PROT_RW, valid: bool = True,
+             swapped: bool = False) -> int:
     pte = frame & _FRAME_MASK
     if prot & PROT_R:
         pte |= _R_BIT
@@ -43,6 +54,8 @@ def pack_pte(frame: int, prot: int = PROT_RW, valid: bool = True) -> int:
         pte |= _W_BIT
     if valid:
         pte |= _VALID_BIT
+    if swapped:
+        pte |= _SWAPPED_BIT
     return pte
 
 
@@ -103,14 +116,20 @@ class PageTable:
 
     def map(self, vpage: int, frame: int, prot: int = PROT_RW) -> None:
         self._check(vpage)
-        if self.is_mapped(vpage):
+        if self.is_mapped(vpage) or self.is_swapped(vpage):
             raise ValueError(f"vpage {vpage} already mapped")
         self._host[vpage] = pack_pte(frame, prot, valid=True)
         self._device = None
 
     def unmap(self, vpage: int) -> int:
-        """Unmap and return the frame that was mapped there."""
+        """Unmap and return the frame that was mapped there (-1 when the
+        page was swapped out -- its contents live on host, not in a device
+        frame; the caller owns dropping the host copy)."""
         self._check(vpage)
+        if self.is_swapped(vpage):
+            self._host[vpage] = 0
+            self._device = None
+            return -1
         if not self.is_mapped(vpage):
             raise ValueError(f"vpage {vpage} not mapped")
         frame = int(self._host[vpage]) & _FRAME_MASK
@@ -120,15 +139,53 @@ class PageTable:
 
     def protect(self, vpage: int, prot: int) -> None:
         self._check(vpage)
+        if self.is_swapped(vpage):
+            self._host[vpage] = pack_pte(0, prot, valid=False, swapped=True)
+            self._device = None
+            return
         if not self.is_mapped(vpage):
             raise ValueError(f"vpage {vpage} not mapped")
         frame = int(self._host[vpage]) & _FRAME_MASK
         self._host[vpage] = pack_pte(frame, prot, valid=True)
         self._device = None
 
+    # -- residency (DEVICE <-> HOST) ------------------------------------------
+    def mark_swapped(self, vpage: int) -> int:
+        """DEVICE -> HOST: drop the valid bit, keep the protection bits, set
+        the swapped bit.  Returns the device frame the page occupied (the
+        caller frees it after saving the contents to the host store)."""
+        self._check(vpage)
+        if not self.is_mapped(vpage):
+            raise ValueError(f"vpage {vpage} not mapped")
+        pte = int(self._host[vpage])
+        frame = pte & _FRAME_MASK
+        prot = self.prot_of(vpage)
+        self._host[vpage] = pack_pte(0, prot, valid=False, swapped=True)
+        self._device = None
+        return frame
+
+    def restore(self, vpage: int, frame: int) -> None:
+        """HOST -> DEVICE: remap a swapped-out page onto ``frame`` with its
+        original protection bits."""
+        self._check(vpage)
+        if not self.is_swapped(vpage):
+            raise ValueError(f"vpage {vpage} not swapped out")
+        prot = self.prot_of(vpage)
+        self._host[vpage] = pack_pte(frame, prot, valid=True)
+        self._device = None
+
     # -- introspection --------------------------------------------------------
     def is_mapped(self, vpage: int) -> bool:
         return bool(self._host[vpage] & _VALID_BIT)
+
+    def is_swapped(self, vpage: int) -> bool:
+        return bool(self._host[vpage] & _SWAPPED_BIT)
+
+    def prot_of(self, vpage: int) -> int:
+        self._check(vpage)
+        pte = int(self._host[vpage])
+        return ((PROT_R if pte & _R_BIT else 0)
+                | (PROT_W if pte & _W_BIT else 0))
 
     def frame_of(self, vpage: int) -> int:
         self._check(vpage)
@@ -138,3 +195,6 @@ class PageTable:
 
     def mapped_count(self) -> int:
         return int((self._host & _VALID_BIT).astype(bool).sum())
+
+    def swapped_count(self) -> int:
+        return int((self._host & _SWAPPED_BIT).astype(bool).sum())

@@ -12,6 +12,12 @@ Semantics (mirroring EMem's drop rules):
   * writes to unmapped / non-writable pages are dropped (physically they are
     redirected to a reserved *trash frame* -- the last physical frame, which
     the allocator never hands out -- so every batch keeps a static shape);
+  * accesses to *swapped-out* pages (mapped, contents on host -- the page
+    table's swapped bit) FAULT: the control-plane half of ``vread``/
+    ``vwrite`` swaps the page back into a device frame first, evicting the
+    least-recently-used resident page if the pool is full, then runs the
+    data-plane step.  ``swap_out``/``swap_in`` are also available directly
+    so a residency policy can pre-evict cold pages;
   * the cache is write-back: a write hit lands only in the cache and the
     line is flushed to the emulated memory on eviction, ``flush()``, or when
     its frame is freed.  Reads are therefore always served from the cache on
@@ -198,6 +204,12 @@ class EMemVM:
         self.page_table = pt_mod.PageTable(cfg.n_vpages, spec.page_slots)
         cspec = cfg.cache_spec()
         self.cache = HotPageCache.create(cspec) if cspec else None
+        #: host backing store for swapped-out pages: vpage -> [ps, width] np
+        self._host_pages: dict[int, np.ndarray] = {}
+        #: LRU bookkeeping for fault-time victim selection
+        self._use_tick: dict[int, int] = {}
+        self._tick = 0
+        self.swap_counters = {"swap_outs": 0, "swap_ins": 0, "faults": 0}
 
     # -- mapping (control plane) ---------------------------------------------
     def map_page(self, vpage: int, prot: int = pt_mod.PROT_RW) -> int:
@@ -210,6 +222,11 @@ class EMemVM:
         return [self.map_page(vpage_start + i, prot) for i in range(n)]
 
     def unmap_page(self, vpage: int) -> None:
+        if self.page_table.is_swapped(vpage):
+            self.page_table.unmap(vpage)          # no device frame to free
+            self._host_pages.pop(vpage, None)
+            self._use_tick.pop(vpage, None)
+            return
         frame = self.page_table.frame_of(vpage)
         self._writeback_frame(frame)
         if self.cache is not None:
@@ -217,18 +234,108 @@ class EMemVM:
                 self.cfg.cache_spec(), self.cache, frame)
         self.page_table.unmap(vpage)
         self.allocator.free(frame)
+        self._use_tick.pop(vpage, None)
 
     def protect(self, vpage: int, prot: int) -> None:
         self.page_table.protect(vpage, prot)
 
+    # -- residency (DEVICE <-> HOST swap) --------------------------------------
+    def swap_out(self, vpage: int) -> None:
+        """Evict a device-resident page to the host store (DEVICE -> HOST).
+
+        The dirty cache line (if any) is written back first, then the page's
+        slots are read out of the emulated memory into a host numpy copy and
+        the device frame returns to the free list.  The page stays mapped
+        but invalid -- a later access faults it back in transparently."""
+        frame = self.page_table.frame_of(vpage)    # raises if not resident
+        self._writeback_frame(frame)
+        if self.cache is not None:
+            self.cache = HotPageCache.invalidate_frame(
+                self.cfg.cache_spec(), self.cache, frame)
+        ps = self.cfg.spec.page_slots
+        addrs = frame * ps + jnp.arange(ps, dtype=jnp.int32)
+        page = np.asarray(_mem_read(self.cfg, self.mesh, self.axes,
+                                    self.data, addrs))
+        self._host_pages[vpage] = page
+        self.page_table.mark_swapped(vpage)
+        self.allocator.free(frame)
+        self._use_tick.pop(vpage, None)
+        self.swap_counters["swap_outs"] += 1
+
+    def swap_in(self, vpage: int) -> int:
+        """Fault a swapped-out page back into a device frame (HOST ->
+        DEVICE); returns the frame.  Raises :class:`OutOfFrames` when the
+        pool is full -- callers that can tolerate eviction should go through
+        the ``vread``/``vwrite`` fault path, which picks an LRU victim."""
+        if not self.page_table.is_swapped(vpage):
+            raise ValueError(f"vpage {vpage} not swapped out")
+        frame = self.allocator.alloc()
+        ps = self.cfg.spec.page_slots
+        addrs = frame * ps + jnp.arange(ps, dtype=jnp.int32)
+        self.data = _mem_write(self.cfg, self.mesh, self.axes, self.data,
+                               addrs, jnp.asarray(self._host_pages[vpage]))
+        self.page_table.restore(vpage, frame)
+        del self._host_pages[vpage]
+        self.swap_counters["swap_ins"] += 1
+        return frame
+
+    def _fault_in(self, addrs) -> None:
+        """Control-plane fault handler: make every swapped page addressed by
+        this batch device-resident before the data-plane step runs.  Evicts
+        least-recently-used resident pages when the pool is exhausted.
+
+        Free when nothing is swapped out: the swap-free data path (every
+        pre-residency caller) must not pay host-side per-access bookkeeping
+        -- the recency ticks only matter once there is a host page a fault
+        could evict for."""
+        if not self._host_pages:
+            return
+        ps = self.cfg.spec.page_slots
+        vpages = np.unique(np.asarray(addrs, np.int64) // ps)
+        vpages = vpages[(vpages >= 0) & (vpages < self.page_table.n_vpages)]
+        needed = set(int(v) for v in vpages)
+        self._tick += 1
+        for vp in needed:
+            if self.page_table.is_mapped(vp):
+                self._use_tick[vp] = self._tick
+        faulted = [vp for vp in needed if self.page_table.is_swapped(vp)]
+        if not faulted:
+            return
+        from repro.emem_vm.allocator import OutOfFrames
+        for vp in faulted:
+            while True:
+                try:
+                    self.swap_in(vp)
+                    break
+                except OutOfFrames:
+                    victim = self._lru_victim(exclude=needed)
+                    if victim is None:
+                        raise
+                    self.swap_out(victim)
+            self._use_tick[vp] = self._tick
+            self.swap_counters["faults"] += 1
+
+    def _lru_victim(self, exclude) -> int | None:
+        """Least-recently-used device-resident page outside ``exclude``."""
+        victim, best = None, None
+        for vp in range(self.page_table.n_vpages):
+            if vp in exclude or not self.page_table.is_mapped(vp):
+                continue
+            tick = self._use_tick.get(vp, 0)
+            if best is None or tick < best:
+                victim, best = vp, tick
+        return victim
+
     # -- data plane -----------------------------------------------------------
     def vread(self, addrs, requester: int = 0) -> jax.Array:
+        self._fault_in(addrs)
         out, self.data, self.cache = read_step(
             self.cfg, self.mesh, self.axes, self.page_table.entries,
             self.data, self.cache, addrs, requester)
         return out
 
     def vwrite(self, addrs, values, requester: int = 0) -> None:
+        self._fault_in(addrs)
         self.data, self.cache = write_step(
             self.cfg, self.mesh, self.axes, self.page_table.entries,
             self.data, self.cache, jnp.asarray(addrs, jnp.int32),
@@ -271,12 +378,15 @@ class EMemVM:
     # -- introspection --------------------------------------------------------
     def counters(self) -> dict:
         if self.cache is None:
-            return {"hits": 0, "misses": 0, "hit_rate": 0.0}
+            return {"hits": 0, "misses": 0, "hit_rate": 0.0,
+                    **self.swap_counters}
         hits = int(jnp.sum(self.cache["hits"]))
         misses = int(jnp.sum(self.cache["misses"]))
         return {"hits": hits, "misses": misses,
-                "hit_rate": hits / max(hits + misses, 1)}
+                "hit_rate": hits / max(hits + misses, 1),
+                **self.swap_counters}
 
     def stats(self) -> dict:
         return {**self.allocator.stats(), **self.counters(),
-                "mapped_pages": self.page_table.mapped_count()}
+                "mapped_pages": self.page_table.mapped_count(),
+                "swapped_pages": self.page_table.swapped_count()}

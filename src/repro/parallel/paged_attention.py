@@ -241,6 +241,83 @@ def paged_decode_block(cfg: ModelConfig, p_attn: dict, h: jax.Array,
     return out, {"k_pages": kp, "v_pages": vp}
 
 
+def paged_entries(cache: dict):
+    """(key, entry) pairs of the cache pytree holding paged KV pages --
+    THE predicate for what swap/COW page movers touch; per-slot recurrent
+    state is everything else (:func:`slot_state_entries`)."""
+    for key, entry in cache.items():
+        if key.startswith("b") and isinstance(entry, dict) \
+                and "k_pages" in entry:
+            yield key, entry
+
+
+def slot_state_entries(cache: dict):
+    """(key, entry) pairs holding per-SLOT state (SSM conv/ssd rows, or the
+    batch layout's k/v) rather than shared paged KV -- what a slot reset
+    zeroes and a swapped-out sequence carries in its resume record."""
+    for key, entry in cache.items():
+        if key.startswith("b") and isinstance(entry, dict) \
+                and "k_pages" not in entry:
+            yield key, entry
+
+
+def _frame_rows(frames: jax.Array, n_pages: int) -> jax.Array:
+    """Frame id -> row of the *global* k/v_pages array.
+
+    Under the cyclic emulated-memory distribution shard ``f % S`` holds
+    frame ``f`` at local row ``f // S``, and the shard_map global array
+    concatenates the shard blocks -- so host-side page movers (COW, swap)
+    must permute, or they would touch the wrong physical pages on any
+    multi-shard mesh.  Identity without a mesh."""
+    ctx = mesh_ctx.get_context()
+    if ctx is None or ctx.n_kv_shards == 1:
+        return frames
+    s = ctx.n_kv_shards
+    return (frames % s) * (n_pages // s) + frames // s
+
+
+def read_frame_pages(cache: dict, frames) -> list:
+    """Snapshot physical frames off the device (DEVICE -> HOST direction of
+    the residency state machine): returns one opaque payload per frame,
+    ``{layer_key: (k_row, v_row)}`` as host numpy, suitable for the
+    BlockManager's host backing store.  One gather + one transfer per layer,
+    not per frame."""
+    import numpy as np
+    idx = jnp.asarray(list(frames), jnp.int32)
+    payloads = [dict() for _ in range(len(idx))]
+    for key, entry in paged_entries(cache):
+        rows = _frame_rows(idx, entry["k_pages"].shape[1])
+        k = np.asarray(entry["k_pages"][:, rows])      # [np_, n, slots, ...]
+        v = np.asarray(entry["v_pages"][:, rows])
+        for i in range(len(idx)):
+            payloads[i][key] = (k[:, i], v[:, i])
+    return payloads
+
+
+def write_frame_pages(cache: dict, assignments) -> dict:
+    """Write swapped-out page payloads back into device frames (HOST ->
+    DEVICE): ``assignments`` is ``[(frame, payload), ...]`` with payloads
+    from :func:`read_frame_pages`.  One scatter per layer."""
+    import numpy as np
+    if not assignments:
+        return cache
+    dst = jnp.asarray([f for f, _ in assignments], jnp.int32)
+    out = dict(cache)
+    for key, entry in paged_entries(cache):
+        rows = _frame_rows(dst, entry["k_pages"].shape[1])
+        k_rows = jnp.asarray(np.stack([p[key][0] for _, p in assignments],
+                                      axis=1))
+        v_rows = jnp.asarray(np.stack([p[key][1] for _, p in assignments],
+                                      axis=1))
+        out[key] = {
+            "k_pages": entry["k_pages"].at[:, rows].set(
+                k_rows.astype(entry["k_pages"].dtype)),
+            "v_pages": entry["v_pages"].at[:, rows].set(
+                v_rows.astype(entry["v_pages"].dtype)),
+        }
+    return out
+
+
 def cow_copy_pages(cache: dict, copies) -> dict:
     """Apply BlockManager CowCopy records to every attention layer's pages.
 
@@ -252,12 +329,14 @@ def cow_copy_pages(cache: dict, copies) -> dict:
     src = jnp.asarray([c.src for c in copies], jnp.int32)
     dst = jnp.asarray([c.dst for c in copies], jnp.int32)
     out = dict(cache)
-    for key, entry in cache.items():
-        if key.startswith("b") and "k_pages" in entry:
-            out[key] = {
-                "k_pages": entry["k_pages"].at[:, dst].set(
-                    entry["k_pages"][:, src]),
-                "v_pages": entry["v_pages"].at[:, dst].set(
-                    entry["v_pages"][:, src]),
-            }
+    for key, entry in paged_entries(cache):
+        n_pages = entry["k_pages"].shape[1]
+        src_r = _frame_rows(src, n_pages)
+        dst_r = _frame_rows(dst, n_pages)
+        out[key] = {
+            "k_pages": entry["k_pages"].at[:, dst_r].set(
+                entry["k_pages"][:, src_r]),
+            "v_pages": entry["v_pages"].at[:, dst_r].set(
+                entry["v_pages"][:, src_r]),
+        }
     return out

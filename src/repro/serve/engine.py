@@ -6,7 +6,7 @@ written into the slot), then advanced together by the shared decode step --
 the standard continuous-batching pattern (vLLM/Orca) on top of this repo's
 model facade.
 
-KV frame ownership is unified behind one refcounted
+KV frame ownership and *residency* are unified behind one refcounted
 :class:`repro.emem_vm.BlockManager`: every sequence goes through a
 logical->frame block table that rides in the cache pytree (``cache["vm"]``)
 into the paged-attention kernel.  The two paged ``kv_layout`` values are
@@ -19,18 +19,38 @@ just allocation policies:
     sequence grows and return at completion.  On top of the indirection:
 
       - **prefix sharing / copy-on-write**: admission matches the prompt
-        against live sequences' prompts; common-prefix pages are shared
-        (refcount++, read-only via the ``frame_ro`` bit in ``cache["vm"]``)
-        and prefill resumes after the shared tokens.  The first divergent
-        write copies the page to a private frame (BlockManager ``CowCopy``
-        records, applied to the device pages before the step).
-      - **preemptive admission**: ``can_admit`` reserves only what the
-        prefill immediately needs (not the worst case), so the pool packs
+        against the retention pool and live sequences' prompts;
+        common-prefix pages are shared (refcount++, read-only via the
+        ``frame_ro`` bit in ``cache["vm"]``) and prefill resumes after the
+        shared tokens.  The first divergent write copies the page to a
+        private frame (BlockManager ``CowCopy`` records, applied to the
+        device pages before the step).
+      - **swap-preemption**: ``can_admit`` reserves only what the
+        admission immediately needs (not the worst case), so the pool packs
         optimistically.  When a growing sequence finds the pool exhausted,
-        the youngest sequence is preempted: its frames are freed and the
-        request is requeued with its generated tokens as a prompt
-        extension (deterministic greedy decode makes the re-run
-        token-identical).
+        the youngest sequence is preempted -- its frames move to the HOST
+        tier (``BlockManager.evict_seq``) and the request is requeued.
+        Re-admission is a *swap-in* (``restore_seq``), not a re-prefill:
+        the engine trades prefill FLOPs for PCIe bytes.  When swapping is
+        unavailable (``preempt_mode="recompute"``, or the host store is
+        full) the PR 2 recompute path still applies: the request requeues
+        with its generated tokens as a prompt extension and deterministic
+        greedy decode makes the re-run token-identical.
+      - **prefix retention**: with ``retain_frames > 0`` completed prompts'
+        prefix pages stay alive in the BlockManager's bounded LRU pool, so
+        a system prompt survives idle gaps between requests.
+      - **next-page prefetch**: pooled decode knows the next page a
+        sequence will need; the frame is allocated one token before the
+        page-boundary write instead of on it (``BlockManager.prefetch``).
+
+The engine itself carries no residency branching: it calls ``evict_seq`` /
+``restore_seq`` / ``release_seq`` and mechanically applies the page moves
+the BlockManager decides on, via the :class:`repro.emem_vm.PageIO`
+callbacks bound at construction.
+
+``ServeEngine`` is a context manager: ``with ServeEngine(...) as eng:``
+guarantees the shutdown leak detector runs even when the body raises
+(active requests are aborted first so the original exception propagates).
 """
 from __future__ import annotations
 
@@ -58,10 +78,20 @@ class EngineConfig:
     max_len: int = 256
     eos_id: int | None = None
     greedy: bool = True
+    #: "swap" parks preempted sequences' pages on host and resumes them with
+    #: a swap-in; "recompute" is the PR 2 requeue-and-re-prefill baseline.
+    preempt_mode: str = "swap"
+    #: device frames the BlockManager may keep holding completed prompts'
+    #: prefix pages (0 disables the retention pool)
+    retain_frames: int = 0
+    #: host backing-store frames (None: one per device frame)
+    host_frames: int | None = None
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, ecfg: EngineConfig):
+        if ecfg.preempt_mode not in ("swap", "recompute"):
+            raise ValueError(f"unknown preempt_mode {ecfg.preempt_mode!r}")
         self.model = model
         self.params = params
         self.ecfg = ecfg
@@ -76,11 +106,18 @@ class ServeEngine:
         self.preempted: list[Request] = []
         self._admit_seq = np.zeros(ecfg.slots, np.int64)  # admission order
         self._admit_counter = 0
+        #: positions per slot whose KV writes have actually committed (the
+        #: decode ran); lengths may run one ahead mid-step, and a swap-out
+        #: must only trust committed KV
+        self._kv_committed = np.zeros(ecfg.slots, np.int64)
+        self._shutdown_stats: dict | None = None
         self.counters = {"admitted": 0, "completed": 0, "preempted": 0,
-                         "shared_prompt_tokens": 0, "leaked_frames": 0}
+                         "swapped": 0, "swap_resumed": 0, "aborted": 0,
+                         "decode_steps": 0, "shared_prompt_tokens": 0,
+                         "leaked_frames": 0}
         cfg = model.cfg
         if cfg.kv_layout in ("paged", "pooled"):
-            from repro.emem_vm import BlockManager
+            from repro.emem_vm import BlockManager, PageIO
             self.page_slots = cfg.kv_page_slots
             self.max_lpages = -(-ecfg.max_len // self.page_slots)
             if cfg.kv_layout == "pooled":
@@ -92,15 +129,48 @@ class ServeEngine:
                 self.n_frames = ecfg.slots * self.max_lpages
             # prefix sharing skips prefill of shared tokens, which is only
             # sound when every layer's per-token state lives in the shared
-            # KV pages (no recurrent SSM state to rebuild)
+            # KV pages (no recurrent SSM state to rebuild); swap does not
+            # care -- evicted slots' recurrent state is saved and restored
+            # alongside the pages.  Retention rides on prefix sharing, so
+            # asking for it on a model that cannot share is an error, not a
+            # silent no-op.
             attn_only = all(cfg.layer_kind(i) == "attn"
                             for i in range(cfg.layer_period))
+            if ecfg.retain_frames > 0 and not attn_only:
+                raise ValueError(
+                    "retain_frames requires an attention-only model: "
+                    "retained pages hold KV only, and an admission that "
+                    "skips prefill cannot rebuild recurrent (SSM) state")
             self.blocks = BlockManager(
                 self.n_frames, ecfg.slots, self.max_lpages, self.page_slots,
-                policy=policy, share_prefixes=attn_only)
+                policy=policy, share_prefixes=attn_only,
+                n_host_frames=ecfg.host_frames,
+                retain_frames=ecfg.retain_frames,
+                swap_enabled=ecfg.preempt_mode == "swap")
+            from repro.parallel.paged_attention import (read_frame_pages,
+                                                        write_frame_pages)
+            self.blocks.page_io = PageIO(
+                read=lambda frames: read_frame_pages(self.cache, frames),
+                write=self._apply_frame_writes)
+            self._write_frame_pages = write_frame_pages
             self.blocks.dirty = True     # push the initial (empty) tables
         else:
             self.blocks = None
+
+    # -- context manager ------------------------------------------------------
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        """Run the shutdown leak detector on every exit path.  When the body
+        raised, active requests are aborted first and a secondary shutdown
+        failure is swallowed so the original exception propagates."""
+        try:
+            self.shutdown(abort=exc_type is not None)
+        except Exception:
+            if exc_type is None:
+                raise
+        return False
 
     def _decode(self, params, toks, cache, lengths, write_mask=None):
         """One jitted decode, synced before returning.
@@ -123,19 +193,43 @@ class ServeEngine:
         logits, cache = self._decode_jit(params, toks, cache, lengths,
                                          jnp.array(write_mask))
         jax.block_until_ready(logits)
+        self.counters["decode_steps"] += 1
         return logits, cache
 
     # -- frame management (both paged layouts, via the BlockManager) ---------
+    def _apply_frame_writes(self, assignments) -> None:
+        """PageIO write callback: scatter host payloads into device frames."""
+        self.cache = self._write_frame_pages(self.cache, assignments)
+
+    def _slot_state_read(self, slot: int) -> dict:
+        """Snapshot a slot's non-paged per-slot cache state (SSM conv/ssd
+        rows) so a swapped-out sequence can resume without replaying it."""
+        from repro.parallel.paged_attention import slot_state_entries
+        return {key: {name: np.asarray(arr[:, slot])
+                      for name, arr in entry.items()}
+                for key, entry in slot_state_entries(self.cache)}
+
+    def _slot_state_write(self, slot: int, state: dict) -> None:
+        for key, sub in state.items():
+            entry = dict(self.cache[key])
+            for name, arr in sub.items():
+                entry[name] = entry[name].at[:, slot].set(
+                    jnp.asarray(arr, entry[name].dtype))
+            self.cache[key] = entry
+
     def _tokens_for(self, req: Request) -> np.ndarray:
-        """The tokens a (re-)admission must prefill: the prompt plus any
-        tokens generated before a preemption (the requeued request's prompt
-        extension).  An empty prompt becomes one implicit BOS so ``logits``
-        is always bound."""
+        """The tokens a (re-)admission must account for: the prompt plus any
+        tokens generated before a preemption.  An empty prompt becomes one
+        implicit BOS so ``logits`` is always bound."""
         toks = np.asarray(req.prompt, np.int32).ravel()
         if req.output:
             toks = np.concatenate([toks,
                                    np.asarray(req.output, np.int32)])
         return toks if len(toks) else np.zeros(1, np.int32)
+
+    def _swap_tag(self, req: Request):
+        swap = getattr(req, "_swap", None)
+        return swap["tag"] if swap is not None else None
 
     def _grow(self, slot: int, new_len: int, lengths: np.ndarray) -> bool:
         """Back position ``new_len - 1`` of ``slot`` with a writable frame,
@@ -170,22 +264,36 @@ class ServeEngine:
                 or cur_len >= self.ecfg.max_len - 1)
 
     def _preempt(self, slot: int, lengths: np.ndarray) -> None:
-        """Evict ``slot``: free its frames and requeue the request.  Its
-        generated tokens ride along as a prompt extension, so the greedy
-        re-run after re-admission is token-identical.  A request that had
-        already produced its last token completes instead of requeueing
-        (re-admitting it would decode past its budget / EOS / max_len)."""
+        """Evict ``slot``.  The BlockManager decides residency: when the
+        swap tier is available the sequence's pages move to the host store
+        and re-admission swaps them back in; otherwise its frames are freed
+        and the generated tokens ride along as a prompt extension so the
+        greedy re-run is token-identical.  A request that had already
+        produced its last token completes instead of requeueing."""
         req = self.slot_req[slot]
         cur_len = int(lengths[slot])
+        committed = int(self._kv_committed[slot])
         self.slot_req[slot] = None
         self.budget[slot] = 0
         lengths[slot] = 0
-        if self.blocks is not None:
-            self.blocks.free_seq(slot)
+        self._kv_committed[slot] = 0
         if self._is_complete(req, cur_len):
+            self._release(slot)
             req.done = True
             self.counters["completed"] += 1
             return
+        if self.blocks is not None:
+            tag = id(req)
+            if self.blocks.evict_seq(slot, tag) is not None:
+                # resume state: committed KV length, the pending next token
+                # (only valid when every committed position was decoded),
+                # and the slot's recurrent (SSM) state
+                req._swap = {"tag": tag, "committed": committed,
+                             "next": getattr(req, "_next", None),
+                             "slot_state": self._slot_state_read(slot)}
+                self.counters["swapped"] += 1
+            else:
+                self.blocks.release_seq(slot, completed=False)
         self.counters["preempted"] += 1
         self.preempted.append(req)
 
@@ -195,7 +303,7 @@ class ServeEngine:
 
     def _release(self, slot: int) -> None:
         if self.blocks is not None:
-            self.blocks.free_seq(slot)
+            self.blocks.release_seq(slot, completed=True)
 
     def _sync_vm(self) -> None:
         """Push the BlockManager tables into the cache pytree if changed."""
@@ -209,13 +317,27 @@ class ServeEngine:
             return {}
         return self.blocks.stats()
 
-    def shutdown(self) -> dict:
+    def shutdown(self, abort: bool = False) -> dict:
         """Leak detector: at shutdown every frame reference must have been
-        released.  Returns the engine counters (dispatch_stats-style);
-        raises if any sequence is still active or any frame leaked."""
+        released (the BlockManager drains its retention pool and unclaimed
+        swap records first -- a drained pool counts as zero).  Idempotent:
+        a second call returns the recorded stats.  ``abort=True`` releases
+        still-active requests instead of refusing (the context-manager exit
+        path when the body raised).  Returns the engine counters
+        (dispatch_stats-style); raises if any sequence is still active or
+        any frame leaked."""
+        if self._shutdown_stats is not None:
+            return self._shutdown_stats
         active = [r.uid for r in self.slot_req if r is not None]
-        if active:
+        if active and not abort:
             raise RuntimeError(f"shutdown with active requests {active}")
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            self.slot_req[i] = None
+            self.counters["aborted"] += 1
+            if self.blocks is not None:
+                self.blocks.release_seq(i, completed=False)
         leaked = self.blocks.shutdown() if self.blocks is not None else 0
         self.counters["leaked_frames"] = leaked
         stats = dict(self.counters)
@@ -227,6 +349,7 @@ class ServeEngine:
             raise RuntimeError(
                 f"KV frame leak at shutdown: {leaked} frames still "
                 f"referenced ({stats})")
+        self._shutdown_stats = stats
         return stats
 
     # -- admission ----------------------------------------------------------
@@ -237,9 +360,11 @@ class ServeEngine:
         """Admission control: the request must fit the engine at all (room
         for at least one generated token under max_len) and have a free
         slot.  With a frame pool, admission is *optimistic*: only the pages
-        the prefill immediately needs (after prefix sharing) must be free --
-        decode-time growth is covered by preemption, not a worst-case
-        reservation."""
+        the admission immediately needs -- after consulting the retention
+        pool and the live prefix match, or the swap record for a preempted
+        request -- must be coverable, counting what reclaiming retained
+        pages would free.  Decode-time growth is covered by preemption, not
+        a worst-case reservation."""
         toks = self._tokens_for(req)
         if len(toks) > self.ecfg.max_len - 2:
             return False
@@ -247,15 +372,21 @@ class ServeEngine:
             return False
         if self.blocks is None:
             return True
-        return self.blocks.can_admit(toks)
+        return self.blocks.can_admit(toks, tag=self._swap_tag(req))
 
     def admit(self, req: Request, slot: int) -> None:
-        """Prefill a request into a slot (token-by-token writes share the
-        decode path, so this works for every KV layout).  Prompt pages
-        shared with a live sequence are skipped: prefill resumes at the
-        first unshared token (the last prompt token always re-runs to bind
-        the next-token logits; its write to a still-shared frame is dropped
-        by the kernel's ``frame_ro`` bit)."""
+        """Admit a request into a slot.
+
+        A swapped-out request *resumes*: its pages swap back in from the
+        host store, its recurrent state is restored, and only tokens beyond
+        the committed KV (at most the one token appended mid-preemption)
+        are decoded -- no re-prefill.  A fresh request prefills token by
+        token through the decode path (so this works for every KV layout);
+        prompt pages shared with the retention pool or a live sequence are
+        skipped: prefill resumes at the first unshared token (the last
+        prompt token always re-runs to bind the next-token logits; its
+        write to a still-shared frame is dropped by the kernel's
+        ``frame_ro`` bit)."""
         assert self.slot_req[slot] is None
         if not self.can_admit(req):      # before any state is mutated
             raise RuntimeError(
@@ -266,12 +397,33 @@ class ServeEngine:
         self.budget[slot] = req.max_new_tokens - len(req.output)
         self._admit_counter += 1
         self._admit_seq[slot] = self._admit_counter
-        self._reset_slot(slot)
-        shared = 0
-        if self.blocks is not None:
-            shared = self.blocks.begin_seq(slot, toks)
-            self.counters["shared_prompt_tokens"] += shared
-        start = min(shared, len(toks) - 1)
+        swap = getattr(req, "_swap", None)
+        if swap is not None and self.blocks is not None \
+                and self.blocks.has_swap(swap["tag"]):
+            # no _reset_slot: the restore overwrites every per-slot field it
+            # would zero (lengths, committed KV, the whole slot state)
+            self.blocks.restore_seq(slot, swap["tag"], toks)
+            self._slot_state_write(slot, swap["slot_state"])
+            start = int(swap["committed"])
+            req._next = swap["next"]
+            del req._swap
+            self.counters["swap_resumed"] += 1
+            lengths = np.array(self.lengths)
+            lengths[slot] = start
+            self.lengths = jnp.array(lengths)
+            self._kv_committed[slot] = start
+            if start >= len(toks):
+                # fully committed: KV, recurrent state and the pending next
+                # token were all restored -- nothing to decode
+                self.counters["admitted"] += 1
+                return
+        else:
+            self._reset_slot(slot)
+            shared = 0
+            if self.blocks is not None:
+                shared = self.blocks.begin_seq(slot, toks)
+                self.counters["shared_prompt_tokens"] += shared
+            start = min(shared, len(toks) - 1)
         mask = np.zeros(self.ecfg.slots, bool)
         mask[slot] = True                # only this slot commits KV writes
         lengths = np.array(self.lengths)
@@ -289,6 +441,7 @@ class ServeEngine:
             logits, self.cache = self._decode(
                 self.params, jnp.array(tok_batch), self.cache, self.lengths,
                 mask)
+            self._kv_committed[slot] = t + 1
         req._next = int(jnp.argmax(logits[slot, :self.model.cfg.vocab_size]))
         self.counters["admitted"] += 1
 
@@ -296,6 +449,16 @@ class ServeEngine:
         lengths = np.array(self.lengths)
         lengths[slot] = 0
         self.lengths = jnp.array(lengths)
+        self._kv_committed[slot] = 0
+        # per-slot state (recurrent SSM rows, batch-layout KV) is zeroed:
+        # recurrent state is cumulative, so a reused slot must not leak the
+        # previous tenant's state into the new sequence
+        from repro.parallel.paged_attention import slot_state_entries
+        for key, entry in slot_state_entries(self.cache):
+            e = dict(entry)
+            for name, arr in e.items():
+                e[name] = arr.at[:, slot].set(0)
+            self.cache[key] = e
 
     # -- decode -------------------------------------------------------------
     def step(self) -> None:
@@ -303,7 +466,9 @@ class ServeEngine:
 
         Frame growth runs oldest-sequence-first so that on pool exhaustion
         the youngest sequences are preempted while the oldest keep making
-        progress (guaranteeing liveness)."""
+        progress (guaranteeing liveness).  After growing, the next page
+        boundary each survivor will cross is prefetched (allocated one
+        token early) so the boundary step never waits on the allocator."""
         order = sorted((i for i, r in enumerate(self.slot_req)
                         if r is not None),
                        key=lambda s: self._admit_seq[s])
@@ -318,7 +483,9 @@ class ServeEngine:
             req.output.append(req._next)
             toks[i, 0] = req._next
             lengths[i] += 1
-            self._grow(i, int(lengths[i]), lengths)
+            if self._grow(i, int(lengths[i]), lengths) and \
+                    self.slot_req[i] is not None and self.blocks is not None:
+                self.blocks.prefetch(i, int(lengths[i]))
         self.lengths = jnp.array(lengths)
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
@@ -329,6 +496,7 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.params, jnp.array(toks), self.cache, self.lengths, mask)
         for i in active:
+            self._kv_committed[i] = int(lengths[i])
             req = self.slot_req[i]
             req._next = int(jnp.argmax(
                 logits[i, :self.model.cfg.vocab_size]))
@@ -340,4 +508,5 @@ class ServeEngine:
                 req.done = True
                 self.slot_req[i] = None
                 self.counters["completed"] += 1
+                self._kv_committed[i] = 0
                 self._release(i)

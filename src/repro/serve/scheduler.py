@@ -2,12 +2,16 @@
 
 Admission asks the engine for headroom (``engine.can_admit``): with a frame
 pool a free slot is not enough -- the pool must also hold the pages the
-request's prefill immediately needs (after prefix sharing).  Admission is
-otherwise *optimistic*: decode-time growth is not reserved up front, and
-when the pool runs dry the engine preempts its youngest sequence.
-Preempted requests are requeued at the FRONT of the queue (they are older
-than anything still waiting) with their generated tokens folded into the
-prompt, so the greedy re-run after re-admission is token-identical.
+admission immediately needs, after consulting the retention pool and the
+live prefix match (or the swap record, for a preempted request whose pages
+are parked on host).  Admission is otherwise *optimistic*: decode-time
+growth is not reserved up front, and when the pool runs dry the engine
+preempts its youngest sequence.  Preempted requests are requeued at the
+FRONT of the queue (they are older than anything still waiting); the
+scheduler does not care how they resume -- under the engine's swap
+preemption re-admission is a swap-in of the parked pages, under the
+recompute fallback the generated tokens are folded into the prompt and
+greedily re-run -- both are token-identical.
 """
 from __future__ import annotations
 

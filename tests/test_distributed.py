@@ -230,6 +230,70 @@ def test_emem_vm_matches_oracle_on_meshes():
     assert "ALL_VM_OK" in out
 
 
+def test_vm_valid_bit_swap_matches_oracle_on_meshes():
+    """Page-table valid-bit semantics on 1/2/4-device meshes: accesses to
+    unmapped pages still fault (read zeros / write dropped), swapped-out
+    pages transparently restore through the vread/vwrite fault path, and
+    every resident byte matches the read_ref/write_ref oracle through the
+    current translation."""
+    out = run_with_devices("""
+        from repro.core import emem
+        from repro.emem_vm import EMemVM, VMConfig
+        for shards in (1, 2, 4):
+            spec = emem.EMemSpec(n_slots=512, width=4, page_slots=16,
+                                 n_shards=shards)
+            mesh = None if shards == 1 else make_mesh((shards,), ("data",))
+            for sets in (0, 4):
+                cfg = VMConfig(spec=spec, n_vpages=24, cache_sets=sets)
+                vm = EMemVM(cfg, mesh=mesh, axes=("data",))
+                vm.map_range(0, 12)
+                rng = np.random.default_rng(shards * 10 + sets)
+                ps = 16
+                logical = np.zeros((12, ps, 4), np.float32)  # the oracle
+                addrs = jnp.asarray(np.arange(12 * ps, dtype=np.int32))
+                vals = rng.normal(size=(12 * ps, 4)).astype(np.float32)
+                vm.vwrite(addrs, jnp.asarray(vals))
+                logical[:] = vals.reshape(12, ps, 4)
+                # swap half the pages out: device capacity is released
+                free0 = vm.allocator.free_count()
+                for vp in range(0, 12, 2):
+                    vm.swap_out(vp)
+                assert vm.allocator.free_count() == free0 + 6, shards
+                assert vm.page_table.swapped_count() == 6
+                # reads fault the pages back in and match the oracle
+                got = np.asarray(vm.vread(addrs))
+                assert np.allclose(got, logical.reshape(-1, 4), atol=1e-6), \\
+                    (shards, sets)
+                assert vm.page_table.swapped_count() == 0
+                assert vm.counters()["swap_ins"] == 6
+                # writes to swapped pages fault in too, then land
+                vm.swap_out(1)
+                w = rng.normal(size=(ps, 4)).astype(np.float32)
+                vm.vwrite(jnp.asarray(np.arange(ps, 2 * ps, dtype=np.int32)),
+                          jnp.asarray(w))
+                logical[1] = w
+                # read_ref oracle through the CURRENT translation (frames
+                # may have moved across the swap round trip); read_ref
+                # takes the logical page order, so undo the device layout
+                vm.flush()
+                data_log = emem.to_logical(spec, vm.data)
+                for vp in range(12):
+                    frame = vm.page_table.frame_of(vp)
+                    phys = jnp.asarray(frame * ps + np.arange(ps, dtype=np.int32))
+                    raw = np.asarray(emem.read_ref(spec, data_log, phys))
+                    assert np.allclose(raw, logical[vp], atol=1e-6), \\
+                        (shards, sets, vp)
+                # unmapped pages still fault: zero reads, dropped writes
+                un = jnp.asarray(np.arange(20 * ps, 21 * ps, dtype=np.int32))
+                assert not np.asarray(vm.vread(un)).any()
+                vm.vwrite(un, jnp.asarray(w))
+                assert not np.asarray(vm.vread(un)).any()
+                print("SWAP_OK", shards, sets)
+        print("ALL_SWAP_OK")
+    """)
+    assert "ALL_SWAP_OK" in out
+
+
 def test_pooled_decode_matches_batch_on_mesh():
     """kv_layout="pooled" with scattered frame assignments matches the
     batch-layout reference on a (4 kv) x (2 tp) mesh."""
@@ -280,6 +344,61 @@ def test_pooled_decode_matches_batch_on_mesh():
         print("POOLED_MESH_OK", err)
     """)
     assert "POOLED_MESH_OK" in out
+
+
+def test_serve_swap_and_cow_token_identity_on_mesh():
+    """Host-side page movers (swap-in/out, COW) must permute frame ids into
+    the cyclic shard layout's global rows -- regression for the bug where
+    ``k_pages[:, frame]`` addressed the wrong physical page on any
+    multi-shard mesh.  Swap-preemption and prefix-sharing COW runs must be
+    token-identical to their references on a (4 kv) x (2 tp) mesh."""
+    out = run_with_devices("""
+        import dataclasses
+        from repro.models import Model, ModelConfig
+        from repro.parallel import mesh_ctx
+        from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+        base = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                           n_heads=8, n_kv_heads=2, head_dim=16, d_ff=128,
+                           vocab_size=128, kv_layout="pooled",
+                           kv_page_slots=4, param_dtype="float32",
+                           compute_dtype="float32")
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, 128,
+                                int(rng.integers(3, 8))).astype(np.int32)
+                   for _ in range(5)]
+        system = rng.integers(0, 128, 9).astype(np.int32)
+        shp = [np.concatenate([system,
+                               rng.integers(0, 128, 2).astype(np.int32)])
+               for _ in range(3)]
+        def run(pool, mode, ps, share):
+            cfg = dataclasses.replace(base, kv_pool_pages=pool)
+            mesh = make_mesh((4, 2), ("data", "model"))
+            mesh_ctx.set_context(mesh, batch_axes=("data",),
+                                 tp_axis="model", kv_axes=("data",))
+            model = Model(cfg); params = model.init(jax.random.key(0))
+            with ServeEngine(model, params,
+                             EngineConfig(slots=5, max_len=32,
+                                          preempt_mode=mode)) as e:
+                e.blocks.share_prefixes = share
+                s = Scheduler(e)
+                s.submit([Request(uid=i, prompt=p, max_new_tokens=6)
+                          for i, p in enumerate(ps)])
+                done = s.run()
+            mesh_ctx.clear_context()
+            return {r.uid: tuple(r.output) for r in done}, e.shutdown()
+        tight, st = run(12, "swap", prompts, False)
+        roomy, _ = run(64, "swap", prompts, False)
+        assert tight == roomy, (tight, roomy)
+        assert st["swapped"] > 0 and st["swap_resumed"] > 0
+        assert st["leaked_frames"] == 0
+        print("MESH_SWAP_OK", st["swapped"], st["swap_in_pages"])
+        shared, st_s = run(24, "swap", shp, True)
+        plain, _ = run(24, "swap", shp, False)
+        assert shared == plain, (shared, plain)
+        assert st_s["cow_copies"] > 0 and st_s["shared_tokens"] > 0
+        print("MESH_COW_OK", st_s["cow_copies"])
+    """)
+    assert "MESH_SWAP_OK" in out and "MESH_COW_OK" in out
 
 
 @pytest.mark.parametrize("n_devices", [1, 2, 4])

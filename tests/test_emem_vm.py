@@ -369,3 +369,350 @@ def test_block_manager_leak_detector():
     bm.begin_seq(0, np.arange(4))
     bm.ensure_writable(0, 0)
     assert bm.shutdown() == 1                        # seq 0 never released
+
+
+# -- allocator residency / host tier / pins ------------------------------------
+def test_allocator_residency_lifecycle():
+    from repro.emem_vm import RES_DEVICE, RES_FREE, RES_HOST
+    a = FrameAllocator(4, n_host_frames=2)
+    f = a.alloc()
+    assert a.residency(f) == RES_DEVICE and not a.is_host_frame(f)
+    h = a.alloc_host()
+    assert h >= 4 and a.is_host_frame(h) and a.residency(h) == RES_HOST
+    assert a.host_used_count() == 1 and a.host_free_count() == 1
+    a.free(f)
+    a.free_host(h)
+    assert a.residency(f) == RES_FREE and a.residency(h) == RES_FREE
+    assert a.host_free_count() == 2
+    # host exhaustion is its own error (device pool untouched)
+    from repro.emem_vm import OutOfHostFrames
+    a.alloc_host(); a.alloc_host()
+    with pytest.raises(OutOfHostFrames):
+        a.alloc_host()
+    assert a.free_count() == 4
+
+
+def test_allocator_pins_and_eviction_candidates():
+    a = FrameAllocator(4)
+    f, g = a.alloc(), a.alloc()
+    assert set(a.eviction_candidates()) == {f, g}     # allocated, unpinned
+    a.pin(f)
+    assert a.eviction_candidates() == [g]
+    a.unpin(f)
+    assert set(a.eviction_candidates()) == {f, g}
+    with pytest.raises(ValueError, match="unpin"):
+        a.unpin(f)
+    with pytest.raises(ValueError, match="pin of free"):
+        a.pin(3)
+    # dropping the last reference to a pinned frame is a lifecycle bug
+    a.pin(f)
+    with pytest.raises(ValueError, match="pinned"):
+        a.free(f)
+    a.unpin(f)
+    a.free(f); a.free(g)
+    assert a.eviction_candidates() == []
+    assert a.stats()["evictable"] == 0
+
+
+# -- page table swapped bit ----------------------------------------------------
+def test_page_table_swapped_bit_semantics():
+    from repro.emem_vm import page_table as pt_mod
+    pt = PageTable(n_vpages=8, page_slots=16)
+    pt.map(2, frame=5, prot=PROT_R)
+    assert pt.mark_swapped(2) == 5
+    # invalid-but-mapped: data-plane drops, control plane can distinguish
+    assert not pt.is_mapped(2) and pt.is_swapped(2)
+    assert pt.swapped_count() == 1
+    _, _, r, w = pt_mod.translate(pt.entries,
+                                  jnp.asarray([2 * 16], jnp.int32), 16)
+    assert not bool(r[0]) and not bool(w[0])
+    with pytest.raises(ValueError, match="already mapped"):
+        pt.map(2, frame=1)                 # swapped pages stay reserved
+    pt.restore(2, frame=3)                 # protection bits survived the trip
+    assert pt.is_mapped(2) and pt.frame_of(2) == 3 and not pt.is_swapped(2)
+    assert pt.prot_of(2) == PROT_R
+    with pytest.raises(ValueError, match="not swapped"):
+        pt.restore(2, frame=1)
+    pt.mark_swapped(2)
+    assert pt.unmap(2) == -1               # no device frame to hand back
+    assert not pt.is_swapped(2) and pt.mapped_count() == 0
+
+
+# -- EMemVM swap-out / fault-through swap-in -----------------------------------
+def test_vm_swap_out_faults_back_in_transparently():
+    vm = make_vm()
+    rng = np.random.default_rng(3)
+    vm.map_range(0, 6)
+    ps, w = vm.cfg.spec.page_slots, vm.cfg.spec.width
+    addrs = jnp.asarray(np.arange(6) * ps, jnp.int32)     # slot 0 of each page
+    vals = jnp.asarray(rng.normal(size=(6, w)).astype(np.float32))
+    vm.vwrite(addrs, vals)
+    free_before = vm.allocator.free_count()
+    vm.swap_out(2)
+    vm.swap_out(4)
+    assert vm.allocator.free_count() == free_before + 2   # capacity released
+    assert vm.page_table.is_swapped(2) and vm.stats()["swapped_pages"] == 2
+    # the access faults the pages back in and reads the original bytes
+    out = np.asarray(vm.vread(addrs))
+    np.testing.assert_allclose(out, np.asarray(vals), rtol=1e-6)
+    assert not vm.page_table.is_swapped(2)
+    assert vm.counters()["swap_ins"] == 2
+    assert vm.counters()["swap_outs"] == 2
+
+
+def test_vm_swap_unmapped_still_faults_and_write_faults_in():
+    """Satellite acceptance: unmapped accesses keep the drop semantics
+    (read zeros / write dropped) while swapped pages restore transparently
+    on the write path too."""
+    vm = make_vm()
+    rng = np.random.default_rng(5)
+    vm.map_range(0, 2)
+    ps, w = vm.cfg.spec.page_slots, vm.cfg.spec.width
+    vals = jnp.asarray(rng.normal(size=(1, w)).astype(np.float32))
+    vm.vwrite(jnp.asarray([0], jnp.int32), vals)
+    vm.swap_out(0)
+    # write to the swapped page faults it in, then lands
+    vm.vwrite(jnp.asarray([1], jnp.int32), 2 * vals)
+    assert not vm.page_table.is_swapped(0)
+    np.testing.assert_allclose(
+        np.asarray(vm.vread(jnp.asarray([0, 1], jnp.int32))),
+        np.concatenate([np.asarray(vals), 2 * np.asarray(vals)]), rtol=1e-6)
+    # unmapped page: read returns zeros, write is dropped -- no fault
+    unmapped = jnp.asarray([10 * ps], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(vm.vread(unmapped)),
+                                  np.zeros((1, w)))
+    vm.vwrite(unmapped, vals)
+    np.testing.assert_array_equal(np.asarray(vm.vread(unmapped)),
+                                  np.zeros((1, w)))
+
+
+def test_vm_fault_evicts_lru_when_pool_full():
+    vm = make_vm()
+    usable = vm.allocator.n_frames
+    vm.map_range(0, usable)                # pool completely full
+    ps, w = vm.cfg.spec.page_slots, vm.cfg.spec.width
+    rng = np.random.default_rng(9)
+    vals = rng.normal(size=(usable, w)).astype(np.float32)
+    vm.vwrite(jnp.asarray(np.arange(usable) * ps, jnp.int32),
+              jnp.asarray(vals))
+    vm.swap_out(0)                         # one page on host, one frame free
+    vm.map_page(usable + 2)                # ...taken by a new mapping
+    # faulting page 0 back in must evict an LRU victim, not fail
+    out = np.asarray(vm.vread(jnp.asarray([0], jnp.int32)))
+    np.testing.assert_allclose(out[0], vals[0], rtol=1e-6)
+    assert vm.page_table.swapped_count() == 1       # the victim moved to host
+    assert vm.counters()["swap_outs"] == 2
+
+
+@pytest.mark.parametrize("cache_sets", [0, 4])
+def test_vm_swap_preserves_dirty_cache_lines(cache_sets):
+    """A swapped-out page whose newest bytes were still sitting in the
+    hot-page cache must carry them to host (write-back before eviction)."""
+    vm = make_vm(cache_sets=cache_sets)
+    rng = np.random.default_rng(13)
+    vm.map_range(0, 4)
+    ps, w = vm.cfg.spec.page_slots, vm.cfg.spec.width
+    addrs = jnp.asarray([0, 1], jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(2, w)).astype(np.float32))
+    vm.vread(addrs)                        # pull page 0 into the cache
+    vm.vwrite(addrs, vals)                 # dirty the cached line
+    vm.swap_out(0)
+    np.testing.assert_allclose(np.asarray(vm.vread(addrs)),
+                               np.asarray(vals), rtol=1e-6)
+
+
+# -- block manager residency (evict/restore/retention/prefetch) ----------------
+class _FakeIO:
+    """PageIO stand-in: payloads are just the frame ids we read."""
+    def __init__(self):
+        self.written: list[tuple] = []
+
+    def read(self, frames):
+        return [("page-of", int(f)) for f in frames]
+
+    def write(self, assignments):
+        self.written.extend(assignments)
+
+
+def _bm_swap(**kw):
+    from repro.emem_vm import PageIO
+    bm = _bm(**kw)
+    io = _FakeIO()
+    bm.page_io = PageIO(read=io.read, write=io.write)
+    return bm, io
+
+
+def test_block_manager_evict_restore_roundtrip():
+    bm, io = _bm_swap()
+    bm.begin_seq(0, np.arange(6))
+    for pos in range(6):
+        bm.ensure_writable(0, pos)
+    used = bm.used_count()
+    n = bm.evict_seq(0, tag=77)
+    assert n == 2                                   # pages 0,1 (6 toks, ps=4)
+    assert bm.used_count() == used - 2              # device capacity released
+    assert bm.allocator.host_used_count() == 2      # ...parked on host
+    assert (bm.block_table[0] < 0).all()
+    assert bm.has_swap(77) and bm.admit_frames_needed(np.arange(6), tag=77) == 2
+    n = bm.restore_seq(1, 77, tokens=np.arange(6))  # restore into ANOTHER slot
+    assert n == 2 and not bm.has_swap(77)
+    assert bm.allocator.host_used_count() == 0
+    assert (bm.block_table[1][:2] >= 0).all()
+    # the payloads written back are exactly the snapshots read at eviction
+    assert len(io.written) == 2
+    assert all(p[0] == "page-of" for _, p in io.written)
+    bm.free_seq(1)
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_evict_shared_prefix_frames():
+    """Evicting a sequence that shares prefix frames with a live donor must
+    snapshot them (copy-before-deref) and leave the donor intact."""
+    bm, _ = _bm_swap()
+    prompt = np.arange(8, dtype=np.int32)
+    bm.begin_seq(0, prompt)
+    for pos in range(8):
+        bm.ensure_writable(0, pos)
+    assert bm.begin_seq(1, prompt) == 8             # full share
+    assert bm.evict_seq(1, tag=5) == 2
+    # donor untouched, no longer shared
+    assert (bm.block_table[0][:2] >= 0).all()
+    assert not bm.frame_ro().any()
+    bm.free_seq(0)                                  # donor leaves entirely
+    bm.restore_seq(2, 5, tokens=prompt)             # restore is private
+    assert (bm.block_table[2][:2] >= 0).all()
+    assert bm.shared_len[2] == 0
+    bm.free_seq(2)
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_swap_unavailable_falls_back():
+    bm = _bm()                                      # no page_io bound
+    bm.begin_seq(0, np.arange(4))
+    bm.ensure_writable(0, 0)
+    assert bm.evict_seq(0, tag=1) is None           # caller must recompute
+    bm2, _ = _bm_swap()
+    bm2.swap_enabled = False
+    bm2.begin_seq(0, np.arange(4))
+    bm2.ensure_writable(0, 0)
+    assert bm2.evict_seq(0, tag=1) is None
+
+
+def test_block_manager_retention_hit_and_lru_bound():
+    bm, _ = _bm_swap(retain_frames=4)
+    sys_prompt = np.arange(8, dtype=np.int32)
+    bm.begin_seq(0, sys_prompt)
+    for pos in range(8):
+        bm.ensure_writable(0, pos)
+    bm.release_seq(0, completed=True)               # prompt pages retained
+    assert bm.stats()["retained_entries"] == 1
+    assert bm.used_count() == 2                     # pages survive the idle gap
+    # eviction candidates == the retained (unpinned) frames
+    assert len(bm.allocator.eviction_candidates()) == 2
+    # a later identical prompt hits the pool: all 8 tokens already present
+    assert bm.admit_frames_needed(sys_prompt) == 0
+    assert bm.begin_seq(1, sys_prompt) == 8
+    assert bm.counters["retained_hits"] == 1
+    assert bm.counters["retained_tokens"] == 8
+    bm.release_seq(1, completed=True)               # dedupe: still one entry
+    assert bm.stats()["retained_entries"] == 1
+    # LRU bound: a different prompt overflows the 4-frame budget -> evict LRU
+    other = 100 + np.arange(12, dtype=np.int32)
+    bm.begin_seq(2, other)
+    for pos in range(12):
+        bm.ensure_writable(2, pos)
+    bm.release_seq(2, completed=True)
+    assert bm.stats()["retained_frames"] <= 4
+    assert bm.counters["retained_reclaimed"] >= 1
+    assert bm.shutdown() == 0                       # drained pool == no leak
+
+
+def test_block_manager_reclaim_keeps_undrainable_entries():
+    """Pool pressure must not wipe retention entries whose frames are still
+    shared with live sequences -- dropping them frees nothing, so they stay
+    (and keep serving prefix hits) while OutOfFrames propagates."""
+    from repro.emem_vm import OutOfFrames
+    bm, _ = _bm_swap(n_frames=3, retain_frames=4)
+    sys_prompt = np.arange(8, dtype=np.int32)
+    bm.begin_seq(0, sys_prompt)
+    for pos in range(8):
+        bm.ensure_writable(0, pos)
+    bm.release_seq(0, completed=True)               # 2 frames retained
+    assert bm.begin_seq(1, sys_prompt) == 8         # live sharer of both
+    with pytest.raises(OutOfFrames):
+        # 1 frame free; seq 2 needs 2 -- the retained entry is undrainable
+        # (its frames are seq 1's prefix), so reclaim must not destroy it
+        for pos in range(8):
+            bm.ensure_writable(2, pos)
+    assert bm.stats()["retained_entries"] == 1      # survived the pressure
+    bm.free_seq(2)
+    assert bm.admit_frames_needed(sys_prompt) == 0  # still a prefix donor
+    bm.free_seq(1)
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_oversized_prompt_never_flushes_retention():
+    """A completed prompt too big for the whole retention budget must be
+    rejected up front -- not admitted at the cost of evicting every smaller
+    (still useful) entry first."""
+    bm, _ = _bm_swap(retain_frames=2, max_lpages=4, n_frames=16)
+    small = np.arange(8, dtype=np.int32)             # 2 pages: fits exactly
+    bm.begin_seq(0, small)
+    for pos in range(8):
+        bm.ensure_writable(0, pos)
+    bm.release_seq(0, completed=True)
+    assert bm.stats()["retained_entries"] == 1
+    big = 100 + np.arange(12, dtype=np.int32)        # 3 pages > budget
+    bm.begin_seq(1, big)
+    for pos in range(12):
+        bm.ensure_writable(1, pos)
+    bm.release_seq(1, completed=True)
+    assert bm.stats()["retained_entries"] == 1       # small entry survived
+    assert bm.admit_frames_needed(small) == 0        # ...and still matches
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_retention_reclaimed_under_pressure():
+    """Live allocations outrank retained pages: pool pressure drops LRU
+    retention entries before OutOfFrames reaches the caller."""
+    bm, _ = _bm_swap(n_frames=4, retain_frames=4)
+    bm.begin_seq(0, np.arange(8))
+    for pos in range(8):
+        bm.ensure_writable(0, pos)
+    bm.release_seq(0, completed=True)
+    assert bm.used_count() == 2                     # 2 retained frames
+    bm.begin_seq(1, 50 + np.arange(12))
+    for pos in range(12):                            # needs 3 of 4 frames
+        bm.ensure_writable(1, pos)
+    assert bm.stats()["retained_entries"] == 0      # reclaimed, not OOF
+    bm.free_seq(1)
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_prefetch_one_token_early():
+    bm = _bm(share_prefixes=False)
+    bm.begin_seq(0, np.arange(3))
+    for pos in range(3):
+        bm.ensure_writable(0, pos)
+    assert bm.used_count() == 1
+    # length 3: next position 3 is NOT a boundary -> no-op
+    assert not bm.prefetch(0, 3)
+    # length 4: next position 4 starts page 1 -> allocate one token early
+    assert bm.prefetch(0, 4)
+    assert bm.counters["prefetch_allocs"] == 1 and bm.used_count() == 2
+    assert not bm.prefetch(0, 4)                    # already mapped: no-op
+    # the boundary write then hits the prefetched frame
+    assert bm.ensure_writable(0, 4) == []
+    assert bm.counters["prefetch_hits"] == 1
+    bm.free_seq(0)
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_prefetch_skips_on_pressure():
+    bm = _bm(n_frames=1, share_prefixes=False)
+    bm.begin_seq(0, np.arange(4))
+    bm.ensure_writable(0, 0)
+    assert not bm.prefetch(0, 4)                    # pool dry: speculative
+    assert bm.counters["prefetch_allocs"] == 0      # page skipped, no raise
+    bm.free_seq(0)
+    assert bm.shutdown() == 0

@@ -306,13 +306,14 @@ def test_oversized_prompt_rejected(rng):
 
 
 def _serve_pooled(rng, prompts, max_new=4, slots=4, max_len=32,
-                  pool_pages=24, share=True):
+                  pool_pages=24, share=True, **ecfg_kw):
     from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
     cfg = _pooled_cfg(pool_pages=pool_pages)
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     engine = ServeEngine(model, params,
-                         EngineConfig(slots=slots, max_len=max_len))
+                         EngineConfig(slots=slots, max_len=max_len,
+                                      **ecfg_kw))
     engine.blocks.share_prefixes = share
     sched = Scheduler(engine)
     sched.submit([Request(uid=i, prompt=p, max_new_tokens=max_new)
@@ -340,6 +341,188 @@ def test_serve_prefix_sharing_token_identity(rng):
     assert st_u["shared_prompt_tokens"] == 0
     assert st_s["allocs"] < st_u["allocs"]        # fewer frames touched
     assert st_s["leaked_frames"] == st_u["leaked_frames"] == 0
+
+
+def test_serve_swap_preemption_token_identity_and_cost(rng):
+    """Tentpole acceptance: a run whose sequences are preempted, swapped to
+    host, and restored produces byte-identical outputs to both the
+    unpreempted run and the PR 2 recompute path -- and resume-by-swap-in
+    costs fewer decode steps than resume-by-re-prefill."""
+    prompts = [rng.integers(0, 64, int(rng.integers(3, 8))).astype(np.int32)
+               for _ in range(5)]
+    kw = dict(max_new=6, slots=5, share=False)
+    swap, st_swap = _serve_pooled(rng, prompts, pool_pages=10,
+                                  preempt_mode="swap", **kw)
+    rec, st_rec = _serve_pooled(rng, prompts, pool_pages=10,
+                                preempt_mode="recompute", **kw)
+    roomy, st_roomy = _serve_pooled(rng, prompts, pool_pages=64, **kw)
+    assert swap == roomy and rec == roomy
+    assert st_swap["swapped"] > 0 and st_swap["swap_resumed"] > 0
+    assert st_swap["swap_in_pages"] > 0
+    assert st_rec["swapped"] == 0 and st_rec["preempted"] > 0
+    assert st_roomy["preempted"] == 0
+    # the FLOPs-for-PCIe-bytes trade: swap resumes skip the re-prefill
+    assert st_swap["decode_steps"] < st_rec["decode_steps"], \
+        (st_swap["decode_steps"], st_rec["decode_steps"])
+    assert st_swap["leaked_frames"] == st_rec["leaked_frames"] == 0
+
+
+def test_serve_swap_identity_across_both_policies(rng):
+    """Acceptance: the preempt+swap+restore pooled run matches the reserved
+    (paged) policy run token for token -- the static layout never preempts,
+    so it doubles as the unpreempted reference for the other policy."""
+    from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+    prompts = [rng.integers(0, 64, int(rng.integers(3, 8))).astype(np.int32)
+               for _ in range(5)]
+    outs, stats = {}, {}
+    for layout, pool in (("paged", None), ("pooled", 10)):
+        cfg = _pooled_cfg(pool_pages=pool, layout=layout)
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        with ServeEngine(model, params,
+                         EngineConfig(slots=5, max_len=32)) as engine:
+            if engine.blocks.policy == "on_demand":
+                engine.blocks.share_prefixes = False
+            sched = Scheduler(engine)
+            sched.submit([Request(uid=i, prompt=p, max_new_tokens=6)
+                          for i, p in enumerate(prompts)])
+            done = sched.run()
+            outs[layout] = {r.uid: tuple(r.output) for r in done}
+        stats[layout] = engine.shutdown()          # idempotent: recorded stats
+    assert outs["paged"] == outs["pooled"]
+    assert stats["pooled"]["swapped"] > 0          # the tight pool did swap
+    assert stats["paged"]["leaked_frames"] == 0
+    assert stats["pooled"]["leaked_frames"] == 0
+
+
+def test_serve_swap_restores_recurrent_state(rng):
+    """Swap-preemption on a hybrid (attention+SSM) model: the evicted
+    slot's conv/ssd state rides the swap record and is restored on resume,
+    and a reused slot starts from zeroed recurrent state -- both runs must
+    match the unconstrained pool token for token."""
+    from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+
+    def hybrid_cfg(pool):
+        return ModelConfig(
+            name="t-hyb", family="hybrid", n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64,
+            attn_period=2, attn_offset=0, ssm_state=8, ssm_head_dim=16,
+            ssm_groups=1, ssm_conv=4, ssm_expand=2, ssd_chunk=8,
+            param_dtype="float32", compute_dtype="float32",
+            attn_chunk_q=16, attn_chunk_k=16, kv_layout="pooled",
+            kv_page_slots=4, kv_pool_pages=pool)
+
+    prompts = [rng.integers(0, 64, int(rng.integers(3, 7))).astype(np.int32)
+               for _ in range(4)]
+
+    def run(pool):
+        model = Model(hybrid_cfg(pool))
+        params = model.init(jax.random.key(0))
+        with ServeEngine(model, params,
+                         EngineConfig(slots=4, max_len=32)) as engine:
+            sched = Scheduler(engine)
+            sched.submit([Request(uid=i, prompt=p, max_new_tokens=5)
+                          for i, p in enumerate(prompts)])
+            done = sched.run()
+        return ({r.uid: tuple(r.output) for r in done}, engine.shutdown())
+
+    tight, st_tight = run(pool=6)
+    roomy, st_roomy = run(pool=32)
+    assert tight == roomy
+    assert st_tight["swapped"] > 0 and st_tight["swap_resumed"] > 0
+    assert st_roomy["swapped"] == 0
+    assert st_tight["leaked_frames"] == 0
+    # retention needs prefix sharing, which recurrent state forbids: asking
+    # for it on a hybrid model is a loud error, not a silent no-op
+    model = Model(hybrid_cfg(32))
+    with pytest.raises(ValueError, match="attention-only"):
+        ServeEngine(model, model.init(jax.random.key(0)),
+                    EngineConfig(slots=2, max_len=32, retain_frames=4))
+
+
+def test_serve_retention_survives_idle_gap(rng):
+    """A completed system prompt's pages stay in the retention pool across
+    an idle gap (nothing live, queue empty) and the next request with the
+    same prefix shares them instead of re-prefilling."""
+    from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+    cfg = _pooled_cfg(pool_pages=16)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    system = rng.integers(0, 64, 8).astype(np.int32)
+    with ServeEngine(model, params,
+                     EngineConfig(slots=2, max_len=32,
+                                  retain_frames=8)) as engine:
+        sched = Scheduler(engine)
+        sched.submit([Request(uid=0, prompt=system, max_new_tokens=3)])
+        sched.run()
+        assert all(r is None for r in engine.slot_req)   # fully idle
+        assert engine.blocks.stats()["retained_entries"] == 1
+        late = Request(uid=1, prompt=np.concatenate(
+            [system, rng.integers(0, 64, 2).astype(np.int32)]),
+            max_new_tokens=3)
+        sched.submit([late])
+        sched.run()
+        assert engine.blocks.counters["retained_hits"] >= 1
+        assert engine.blocks.counters["retained_tokens"] >= len(system) - 1
+    # context-manager exit ran the leak detector; drained pool counts as 0
+    assert engine.shutdown()["leaked_frames"] == 0
+
+
+def test_serve_prefetch_allocates_before_boundary(rng):
+    """Satellite: pooled decode allocates the next page one token before
+    the boundary; the boundary write then hits the prefetched frame."""
+    from repro.serve import EngineConfig, Request, ServeEngine
+    cfg = _pooled_cfg(pool_pages=16)     # page_slots=4
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    with ServeEngine(model, params, EngineConfig(slots=1, max_len=32)) \
+            as engine:
+        req = Request(uid=0, prompt=rng.integers(0, 64, 3).astype(np.int32),
+                      max_new_tokens=8)   # crosses positions 4 and 8
+        engine.admit(req, 0)
+        while engine.slot_req[0] is not None:
+            engine.step()
+    stats = engine.shutdown()
+    assert stats["prefetch_allocs"] >= 2
+    assert stats["prefetch_hits"] >= 2
+    assert stats["leaked_frames"] == 0
+
+
+def test_engine_context_manager_aborts_on_exception(rng):
+    """Satellite: the leak detector cannot be skipped by an exception --
+    __exit__ aborts active requests, releases their frames, and lets the
+    original exception propagate."""
+    from repro.serve import EngineConfig, Request, ServeEngine
+    cfg = _pooled_cfg(pool_pages=16)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    with pytest.raises(ValueError, match="boom"):
+        with ServeEngine(model, params,
+                         EngineConfig(slots=2, max_len=32)) as engine:
+            engine.admit(Request(uid=0,
+                                 prompt=rng.integers(0, 64, 5)
+                                 .astype(np.int32),
+                                 max_new_tokens=4), 0)
+            raise ValueError("boom")
+    stats = engine.shutdown()            # idempotent: the recorded stats
+    assert stats["aborted"] == 1
+    assert stats["leaked_frames"] == 0
+    assert engine.blocks.used_count() == 0
+
+
+def test_engine_shutdown_idempotent(rng):
+    from repro.serve import EngineConfig, Request, ServeEngine
+    cfg = _pooled_cfg(pool_pages=16)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, EngineConfig(slots=1, max_len=32))
+    req = Request(uid=0, prompt=rng.integers(0, 64, 4).astype(np.int32),
+                  max_new_tokens=2)
+    engine.admit(req, 0)
+    while engine.slot_req[0] is not None:
+        engine.step()
+    first = engine.shutdown()
+    assert engine.shutdown() is first    # second call: recorded stats, no re-run
 
 
 def test_serve_preemption_token_identity(rng):

@@ -68,6 +68,44 @@ def test_speedup_up_to_16_tiles():
         assert emulation.slowdown(mix, "mesh", 1024, 16) < 1.0
 
 
+# -- §7.2 extension: the host (PCIe) tier -------------------------------------
+def test_host_tier_embeds_device_model_and_is_monotone():
+    """The two-tier residency model must reduce to the device-only model at
+    host_frac=0 and price every additional fault monotonically."""
+    sweep = emulation.fig_swap_sweep(1024)
+    assert sweep["host_frac"][0] == 0.0
+    base = emulation.slowdown(emulation.DHRYSTONE, "clos", 1024, 1024)
+    assert sweep["clos"][0] == pytest.approx(base)
+    for net in ("clos", "mesh"):
+        vals = sweep[net]
+        assert all(b >= a for a, b in zip(vals, vals[1:])), vals
+        assert vals[-1] > vals[0]          # a 10% fault rate must show up
+    assert sweep["fault_cycles"] > 0
+
+
+def test_host_tier_fault_cost_scales_with_page_and_bandwidth():
+    slow = emulation.HostTierConfig(pcie_gbps=4.0, page_kb=16.0)
+    fast = emulation.HostTierConfig(pcie_gbps=64.0, page_kb=4.0)
+    assert slow.roundtrip_cycles() > fast.roundtrip_cycles()
+    # latency floor: an empty transfer still pays the round trip
+    lat_only = emulation.HostTierConfig(pcie_latency_us=2.0, page_kb=1e-9)
+    assert lat_only.roundtrip_cycles() >= 2.0e-6 * 1e9  # >= 2us of cycles
+    with pytest.raises(ValueError):
+        emulation.HostTierConfig(host_frac=1.5)
+
+
+def test_swap_break_even_favors_swap_for_expensive_rebuilds():
+    """Swapping beats recompute while faults-per-eviction stays under the
+    rebuild/roundtrip ratio; a costlier rebuild raises the threshold."""
+    host = emulation.HostTierConfig()
+    cheap = emulation.swap_break_even_accesses(host, rebuild_cycles=1e5)
+    dear = emulation.swap_break_even_accesses(host, rebuild_cycles=1e8)
+    assert 0 < cheap < dear
+    # a serving-style rebuild (replaying a long prefix) is far past one
+    # fault per eviction -- the regime where the engine's swap path wins
+    assert dear > 1.0
+
+
 def test_fit_hot_set_kb_recovers_synthetic_trace():
     """Calibration helper: traces generated from a known working-set
     half-size must fit back to it (and access counts weight the fit)."""
