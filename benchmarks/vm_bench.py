@@ -1,19 +1,30 @@
 """EMemVM microbenchmark: virtual read/write throughput, cache hit rate,
 pooled-vs-fixed slot utilization, the shared-prefix serving workload
 (N requests x one system prompt through the real engine + BlockManager),
-and the swap/churn workload (preempt+swap+restore vs recompute, plus the
-retained-prefix hit rate across an idle gap).
+the swap/churn workload (preempt+swap+restore vs recompute, plus the
+retained-prefix hit rate across an idle gap), and the residency-aware
+scheduling workload (mixed hot-prefix/cold traffic: bounded-window
+admission reordering vs FIFO at equal KV bytes).
 
 Also consolidates the results into ``BENCH_vm.json`` at the repo root so the
-perf trajectory of the virtual-memory subsystem is tracked PR over PR.
+perf trajectory of the virtual-memory subsystem is tracked PR over PR: every
+run is stamped with a ``meta`` record (git rev + workload config), and a
+rewrite moves the prior run's headline numbers into a bounded ``history``
+list instead of discarding them, so cross-PR comparisons have commit
+identities to anchor on.
 
 ``python -m benchmarks.vm_bench --smoke`` runs a tiny (<30 s) configuration
 suitable for CI: allocator / engine regressions show up as benchmark
 crashes (leak-detector shutdown included), not just test failures.  The
-smoke run asserts the swap workload's acceptance criteria -- resume-by-swap
-cheaper than resume-by-recompute, nonzero retained-prefix hit rate -- and
-merges its swap/retention metrics into ``BENCH_vm.json`` (uploaded as a CI
-artifact) without overwriting the tracked full-run numbers.
+smoke run asserts the swap and scheduling acceptance criteria --
+resume-by-swap cheaper than resume-by-recompute, nonzero retained-prefix
+hit rate, >=1.2x tokens-per-decode-step from admission reordering -- and
+merges its serving-workload metrics into ``BENCH_vm.json`` (uploaded as a
+CI artifact) without overwriting the tracked full-run numbers.  The
+serving workloads (prefix/swap/retention/scheduling) use the same
+configuration in both modes, so ``--gate`` can compare a smoke run's
+headline numbers against the committed baseline and fail on a >15%
+regression (the devcheck/CI bench-regression gate).
 """
 from __future__ import annotations
 
@@ -21,6 +32,7 @@ import argparse
 import functools
 import json
 import os
+import subprocess
 
 import jax
 import jax.numpy as jnp
@@ -252,9 +264,10 @@ def _swap_rows(record: dict, smoke: bool = False) -> list[dict]:
     FLOPs proxy that dominates at production model sizes; wall time is
     recorded alongside but at this toy scale (2-layer model, microsecond
     decodes) the host round trips outweigh the saved forwards, cf.
-    ``emulation.swap_break_even_accesses``."""
+    ``emulation.swap_break_even_accesses``.  Same size in smoke and full
+    runs, so the smoke numbers gate against the committed baseline."""
     rng = np.random.default_rng(2)
-    n_req = 5 if smoke else 8
+    n_req = 8
     prompts = [rng.integers(0, 64, int(rng.integers(3, 8))).astype(np.int32)
                for _ in range(n_req)]
     out_swap, st_swap, us_swap = _run_churn("swap", prompts, 6, n_req, 10)
@@ -296,7 +309,7 @@ def _retention_rows(record: dict, smoke: bool = False) -> list[dict]:
     their prompt pages must come from the retention pool, not a prefill."""
     from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
     rng = np.random.default_rng(4)
-    sys_len, tail_len, late = 12, 2, (2 if smoke else 4)
+    sys_len, tail_len, late = 12, 2, 4
     system = rng.integers(0, 64, sys_len).astype(np.int32)
     model, params = _tiny_model()
     with ServeEngine(model, params,
@@ -330,38 +343,246 @@ def _retention_rows(record: dict, smoke: bool = False) -> list[dict]:
                 f"({hit_rate:.0%} of late prompt tokens) across idle gap")]
 
 
-def rows(smoke: bool = False) -> list[dict]:
+# ---------------------------------------------------------------------------
+# Residency-aware scheduling workload (admission reordering vs FIFO)
+# ---------------------------------------------------------------------------
+def _run_sched(window: int, system, cold_prompt, hot_tails, pool: int,
+               slots: int, retain: int):
+    """One mixed hot-prefix/cold run at the given reorder window.  A warmup
+    request retains the system prompt, then a cold long-prompt request is
+    queued AHEAD of the hot-prefix traffic.  Returns per-uid outputs, the
+    decode steps spent on the main phase (warmup excluded), and the engine
+    stats."""
+    from repro.serve import (EngineConfig, Request, Scheduler,
+                             SchedulerConfig, ServeEngine)
+    model, params = _tiny_model(pool_pages=pool)
+    with ServeEngine(model, params,
+                     EngineConfig(slots=slots, max_len=48,
+                                  retain_frames=retain)) as engine:
+        sched = Scheduler(engine, SchedulerConfig(window=window,
+                                                  aging_steps=500))
+        sched.submit([Request(uid=99, prompt=system, max_new_tokens=2)])
+        sched.run()                      # warmup: system prompt retained
+        warm_steps = engine.counters["decode_steps"]
+        reqs = [Request(uid=0, prompt=cold_prompt, max_new_tokens=8)] + [
+            Request(uid=1 + i, prompt=np.concatenate([system, tail]),
+                    max_new_tokens=2) for i, tail in enumerate(hot_tails)]
+        sched.submit(reqs)
+        done = sched.run()
+        steps = engine.counters["decode_steps"] - warm_steps
+    stats = engine.shutdown()
+    outs = {r.uid: tuple(r.output) for r in done if r.uid != 99}
+    return outs, steps, stats
+
+
+def _sched_rows(record: dict, smoke: bool = False) -> list[dict]:
+    """Tentpole acceptance: residency-aware admission reordering must beat
+    FIFO by >=1.2x tokens per decode step on mixed hot-prefix/cold traffic
+    at equal KV bytes, token-identically per request.
+
+    The traffic is adversarial for FIFO: a cold long-prompt request heads
+    the queue, sized so admitting it exhausts the pool (head-of-line
+    blocking: the hot-prefix requests behind it are starved of frames and
+    the slots idle), and its decode growth reclaims the retained system
+    prompt -- so under FIFO every later hot wave's leader pays the full
+    system-prompt prefill from scratch.  The reordering scheduler admits
+    the hot requests first -- their prefix pages are resident, so they
+    cost one frame and two prefill steps each -- and takes the cold
+    request last, when the frames are free anyway.  Same pool, same
+    requests, same tokens; only the admission order (and with it
+    decode-step concurrency + prefill sharing) differs."""
+    rng = np.random.default_rng(7)
+    pool, slots, n_hot, retain = 13, 4, 6, 6   # same size in smoke + full
+    system = rng.integers(0, 64, 24).astype(np.int32)      # 6 retained pages
+    cold_prompt = rng.integers(0, 64, 28).astype(np.int32)  # 7 pages: pool-
+    hot_tails = [rng.integers(0, 64, 2).astype(np.int32)    # filling when hot
+                 for _ in range(n_hot)]                     # traffic is live
+    fifo, steps_fifo, st_fifo = _run_sched(1, system, cold_prompt,
+                                           hot_tails, pool, slots, retain)
+    reord, steps_re, st_re = _run_sched(8, system, cold_prompt,
+                                        hot_tails, pool, slots, retain)
+    assert fifo == reord, "admission reordering changed decoded tokens"
+    tokens = sum(len(o) for o in fifo.values())
+    tps_fifo = tokens / max(steps_fifo, 1)
+    tps_re = tokens / max(steps_re, 1)
+    ratio = tps_re / tps_fifo
+    assert st_re["retained_hits"] > st_fifo["retained_hits"], (
+        "reordering did not route admissions to the retained prefix")
+    assert ratio >= 1.2, (
+        f"reordering tokens/decode-step {tps_re:.3f} not >=1.2x FIFO "
+        f"{tps_fifo:.3f} (ratio {ratio:.2f})")
+    record["scheduling"] = {
+        "pool_pages": pool, "requests": 1 + n_hot, "tokens": tokens,
+        "decode_steps_fifo": steps_fifo,
+        "decode_steps_reorder": steps_re,
+        "tokens_per_step_fifo": round(tps_fifo, 3),
+        "tokens_per_step_reorder": round(tps_re, 3),
+        "tokens_per_step_ratio": round(ratio, 3),
+        "retained_hits_fifo": st_fifo["retained_hits"],
+        "retained_hits_reorder": st_re["retained_hits"],
+        "shared_prompt_tokens_reorder": st_re["shared_prompt_tokens"],
+    }
+    return [
+        row("vm/sched/tokens_per_step", 0.0,
+            f"reorder={tps_re:.3f} fifo={tps_fifo:.3f} "
+            f"({ratio:.2f}x at equal KV bytes)"),
+        row("vm/sched/steps", 0.0,
+            f"reorder={steps_re} fifo={steps_fifo} decode steps for "
+            f"{tokens} tokens"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# BENCH_vm.json bookkeeping: meta stamps, history, regression gate
+# ---------------------------------------------------------------------------
+#: sections re-measured identically by smoke runs (mergeable + gateable)
+_SERVING_SECTIONS = ("prefix_sharing", "swap", "retention", "scheduling")
+#: headline metric per section for history and the regression gate
+#: (all higher-is-better)
+_HEADLINES = {
+    "prefix_sharing": "concurrency_ratio",
+    "swap": "decode_step_ratio",
+    "retention": "retained_hit_rate",
+    "scheduling": "tokens_per_step_ratio",
+}
+_HISTORY_LIMIT = 50
+
+
+def _git(*args: str) -> str:
+    try:
+        out = subprocess.run(
+            ["git", *args], cwd=os.path.dirname(_JSON_PATH),
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else ""
+    except (OSError, subprocess.SubprocessError):
+        return ""                        # no git / hung git: stamp unknown
+
+
+def _meta(smoke: bool) -> dict:
+    """The identity stamp of a run: which commit produced these numbers
+    (``dirty`` marks uncommitted changes -- the numbers then belong to the
+    NEXT commit) and the workload config they were measured under."""
+    return {"git_rev": _git("rev-parse", "--short", "HEAD") or "unknown",
+            "dirty": bool(_git("status", "--porcelain")),
+            "smoke": bool(smoke),
+            "config": {"model": "bench-tiny", "page_slots": 4}}
+
+
+def _load_baseline() -> dict:
+    try:
+        with open(_JSON_PATH) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def _history_entry(prior: dict) -> dict | None:
+    """Compress a prior record to its identity + headline numbers."""
+    heads = {f"{sec}_{key}": prior[sec][key]
+             for sec, key in _HEADLINES.items()
+             if isinstance(prior.get(sec), dict) and key in prior[sec]}
+    if not heads:
+        return None
+    return {"meta": prior.get("meta", {"git_rev": "unknown"}), **heads}
+
+
+def _merge_record(record: dict, smoke: bool) -> dict:
+    """Fold this run into the on-disk record without losing the trajectory:
+    the prior run's headline numbers (with their meta stamp) move into the
+    bounded ``history`` list -- keyed by git rev, so re-runs at the same
+    commit replace rather than accumulate.  A smoke run only refreshes the
+    serving-workload sections (identical config in both modes); a full run
+    replaces everything else too."""
+    prior = _load_baseline()
+    history = prior.pop("history", [])
+    entry = _history_entry(prior)
+    if entry is not None:
+        rev = entry["meta"].get("git_rev")
+        history = [h for h in history
+                   if h.get("meta", {}).get("git_rev") != rev]
+        history.append(entry)
+        history = history[-_HISTORY_LIMIT:]
+    merged = prior if smoke else {}
+    merged.update({k: v for k, v in record.items()
+                   if not smoke or k in _SERVING_SECTIONS})
+    merged["meta"] = _meta(smoke)
+    if history:
+        merged["history"] = history
+    return merged
+
+
+def check_gate(record: dict, max_regression: float = 0.15) -> list[str]:
+    """Compare this run's headline numbers against the committed baseline;
+    return a list of failure messages for metrics that regressed by more
+    than ``max_regression`` (all headline metrics are higher-is-better).
+    Metrics absent from either side are skipped, so the gate tolerates a
+    baseline predating a workload."""
+    baseline = _load_baseline()
+    failures = []
+    for sec, key in _HEADLINES.items():
+        base = baseline.get(sec, {})
+        cur = record.get(sec, {})
+        if not (isinstance(base, dict) and key in base and key in cur):
+            continue
+        floor = float(base[key]) * (1.0 - max_regression)
+        if float(cur[key]) < floor:
+            failures.append(
+                f"{sec}.{key}: {cur[key]} < {floor:.3f} "
+                f"(baseline {base[key]}, allowed regression "
+                f"{max_regression:.0%})")
+    return failures
+
+
+def collect(smoke: bool = False) -> tuple[list[dict], dict]:
     record: dict = {}
     out = (_throughput_rows(record, smoke) + _utilization_rows(record)
            + _prefix_rows(record, smoke) + _swap_rows(record, smoke)
-           + _retention_rows(record, smoke))
-    if smoke:
-        # a local smoke run (scripts/devcheck.sh) must not dirty the
-        # tracked full-run numbers; in CI the swap/retention metrics (the
-        # asserted ones) are merged in so the uploaded artifact is fresh
-        if not os.environ.get("CI"):
-            return out
-        try:
-            with open(_JSON_PATH) as f:
-                merged = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            merged = {}
-        merged["swap"] = {**record["swap"], "smoke": True}
-        merged["retention"] = {**record["retention"], "smoke": True}
-        record = merged
+           + _retention_rows(record, smoke) + _sched_rows(record, smoke))
+    return out, record
+
+
+def _write(record: dict, smoke: bool) -> None:
+    merged = _merge_record(record, smoke)   # BEFORE the truncating open
     with open(_JSON_PATH, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True)
+        json.dump(merged, f, indent=2, sort_keys=True)
         f.write("\n")
+
+
+def _finalize(out: list[dict], record: dict, smoke: bool) -> list[dict]:
+    """The one write policy: a local smoke run (scripts/devcheck.sh) must
+    not dirty the tracked full-run numbers; in CI the serving-workload
+    sections (the asserted ones) are merged in so the uploaded artifact is
+    fresh, and a full run rewrites everything."""
+    if smoke and not os.environ.get("CI"):
+        return out
+    _write(record, smoke)
     out.append(row("vm/json", 0.0, "wrote BENCH_vm.json"))
     return out
 
 
+def rows(smoke: bool = False) -> list[dict]:
+    out, record = collect(smoke)
+    return _finalize(out, record, smoke)
+
+
 def main() -> None:
+    import sys
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny configuration (<30 s) for CI")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on a >15%% headline-metric regression vs "
+                         "the committed BENCH_vm.json baseline")
     args = ap.parse_args()
-    print_csv(rows(smoke=args.smoke))
+    out, record = collect(smoke=args.smoke)
+    failures = check_gate(record) if args.gate else []   # vs pre-write file
+    print_csv(_finalize(out, record, args.smoke))
+    if failures:
+        print("bench regression gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print("  " + msg, file=sys.stderr)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -9,12 +9,16 @@ export XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
 python -m pytest -x -q "$@"
 
-# vm_bench smoke (incl. the swap/churn + retention workloads) must stay
-# inside the CI budget: allocator/engine/residency regressions crash it,
-# slowdowns fail the 30 s gate.
+# vm_bench smoke (incl. the swap/churn, retention and scheduling
+# workloads) must stay inside the CI budget: allocator/engine/residency
+# regressions crash it, slowdowns fail the 30 s gate.  --gate additionally
+# compares the smoke run's headline numbers (shared-prefix concurrency,
+# swap decode-step savings, retention hit rate, scheduling tokens/step)
+# against the committed BENCH_vm.json baseline and fails on a >15%
+# regression, so the scheduling/residency gains cannot silently rot.
 SMOKE_BUDGET_S=30
 start=$(date +%s)
-python -m benchmarks.vm_bench --smoke
+python -m benchmarks.vm_bench --smoke --gate
 elapsed=$(( $(date +%s) - start ))
 if [ "$elapsed" -gt "$SMOKE_BUDGET_S" ]; then
     echo "vm_bench --smoke took ${elapsed}s (> ${SMOKE_BUDGET_S}s budget)" >&2

@@ -106,6 +106,13 @@ class HostTierConfig:
         xfer_s = 2 * self.page_kb * 1024 / (self.pcie_gbps * 1e9)
         return (self.pcie_latency_us * 1e-6 + xfer_s) * clock_ghz * 1e9
 
+    def page_in_cycles(self, clock_ghz: float = P.CHIP.clock_ghz) -> float:
+        """Cycles to move one page host->device (one direction, no victim
+        write-back): the per-page price of a planned swap-in, as opposed to
+        the demand-fault round trip of :meth:`roundtrip_cycles`."""
+        xfer_s = self.page_kb * 1024 / (self.pcie_gbps * 1e9)
+        return (self.pcie_latency_us * 1e-6 + xfer_s) * clock_ghz * 1e9
+
 
 def fit_hot_set_kb(traces) -> float:
     """Fit :attr:`CacheConfig.hot_set_half_kb` from measured cache traces.
@@ -297,6 +304,44 @@ def fig_swap_sweep(system_tiles: int, emulation_tiles: int | None = None,
                      host=dataclasses.replace(host, host_frac=f))
             for f in host_fracs]
     return out
+
+
+#: default §7-model price of re-prefilling one token through the serving
+#: model.  A stand-in FLOPs proxy: only the RATIO to the PCIe page cost
+#: matters for ranking admissions, and for KV-style state the rebuild
+#: (replaying the prefix through every layer) dwarfs a page transfer --
+#: cf. :func:`swap_break_even_accesses`.
+PREFILL_CYCLES_PER_TOKEN = 10_000.0
+
+
+def admission_score(shared_tokens: int, swap_in_pages: int, page_slots: int,
+                    host: HostTierConfig | None = None,
+                    prefill_cycles_per_token: float = PREFILL_CYCLES_PER_TOKEN,
+                    clock_ghz: float = P.CHIP.clock_ghz) -> float:
+    """Price an admission's residency terms into one score (cycles saved).
+
+    The two ways an admission can exploit memory that is already where the
+    work needs it:
+
+      * ``shared_tokens`` leading prompt tokens are backed by resident
+        pages (retention pool or a live prefix) -- their prefill FLOPs are
+        avoided outright;
+      * a swap record exists: the resume skips re-prefilling the
+        ``swap_in_pages * page_slots`` committed tokens but pays the PCIe
+        transfer of those pages (:meth:`HostTierConfig.page_in_cycles`).
+
+    A cold request scores 0; anything resident scores positive as long as
+    a token's prefill outweighs its share of a page transfer (it does by
+    orders of magnitude at production model sizes -- the same inequality
+    :func:`swap_break_even_accesses` measures).  The score is a *ranking*
+    signal for bounded-window admission reordering, not a latency estimate.
+    """
+    host = host if host is not None else HostTierConfig()
+    saved = shared_tokens * prefill_cycles_per_token
+    if swap_in_pages:
+        saved += swap_in_pages * page_slots * prefill_cycles_per_token
+        saved -= swap_in_pages * host.page_in_cycles(clock_ghz)
+    return saved
 
 
 def swap_break_even_accesses(host: HostTierConfig, rebuild_cycles: float,

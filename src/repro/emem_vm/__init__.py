@@ -25,8 +25,8 @@ package adds the indirection that turns the emulation into a memory *system*:
 from repro.emem_vm.allocator import (FrameAllocator, OutOfFrames,  # noqa: F401
                                      OutOfHostFrames, RES_DEVICE, RES_FREE,
                                      RES_HOST)
-from repro.emem_vm.block_manager import (BlockManager, CowCopy,  # noqa: F401
-                                         PageIO)
+from repro.emem_vm.block_manager import (AdmissionCost, BlockManager,  # noqa: F401
+                                         CowCopy, PageIO)
 from repro.emem_vm.cache import CacheSpec, HotPageCache  # noqa: F401
 from repro.emem_vm.page_table import PROT_NONE, PROT_R, PROT_RW, PROT_W  # noqa: F401
 from repro.emem_vm.page_table import PageTable  # noqa: F401

@@ -66,6 +66,30 @@ from repro.emem_vm.allocator import (FrameAllocator, OutOfFrames,  # noqa: F401
 
 
 @dataclasses.dataclass(frozen=True)
+class AdmissionCost:
+    """What admitting a request *right now* would cost and save -- the
+    residency signal the scheduler's admission policy prices into a score
+    (``emulation.admission_score``).
+
+    Under the reserved policy every field is zero (static tables carry no
+    residency information), so any score built on top degenerates to FIFO.
+    """
+    #: device frames the admission must allocate (prefill pages after
+    #: prefix sharing, or the swap record's page count for a resume)
+    new_frames: int
+    #: leading prompt tokens whose prefill would be skipped because their
+    #: pages are resident (retention pool or a live sequence's prefix)
+    shared_tokens: int
+    #: host pages a swap-resume would move back over PCIe (0 for a fresh
+    #: admission)
+    swap_in_pages: int
+    #: a swap record is parked on host for this request
+    has_swap: bool
+    #: the need is coverable right now (free frames + drainable retention)
+    admissible: bool
+
+
+@dataclasses.dataclass(frozen=True)
 class CowCopy:
     """Device-side page copy the engine must apply: frame ``src`` -> ``dst``
     (every attention layer's k_pages/v_pages row)."""
@@ -263,18 +287,21 @@ class BlockManager:
         return best, donor
 
     def _admit_need(self, tokens: np.ndarray, tag: int | None):
-        """(frames needed, retained entry the admission would share from)."""
+        """(frames needed, shared prefix tokens, swap pages, pool entry the
+        admission would share from)."""
         if self.policy == "reserved":
-            return 0, None
+            return 0, 0, 0, None
         if tag is not None and tag in self._swapped:
-            return len(self._swapped[tag].pages), None
+            pages = len(self._swapped[tag].pages)
+            return pages, 0, pages, None
         n = max(len(tokens), 1)
         match, donor = self._match_prefix(np.asarray(tokens))
         pool_key = donor[1] if donor is not None and donor[0] == "pool" \
             else None
         if n <= match:
-            return 0, pool_key          # whole prompt shared: re-run only
-        return self.pages_for(n) - match // self.page_slots, pool_key
+            return 0, match, 0, pool_key  # whole prompt shared: re-run only
+        return (self.pages_for(n) - match // self.page_slots, match, 0,
+                pool_key)
 
     def admit_frames_needed(self, tokens: np.ndarray,
                             tag: int | None = None) -> int:
@@ -283,14 +310,26 @@ class BlockManager:
         identified by ``tag`` -- the pages its restore will swap back in."""
         return self._admit_need(tokens, tag)[0]
 
+    def admission_cost(self, tokens: np.ndarray,
+                       tag: int | None = None) -> AdmissionCost:
+        """The residency cost terms of admitting ``tokens`` right now: the
+        frames it must allocate, the prefix tokens whose prefill it would
+        skip, and the PCIe pages a swap-resume (identified by ``tag``)
+        would move.  Pure query -- no state is touched, so the scheduler
+        may score every waiting request each step."""
+        need, match, swap_pages, pool_key = self._admit_need(tokens, tag)
+        return AdmissionCost(
+            new_frames=need, shared_tokens=int(match),
+            swap_in_pages=swap_pages, has_swap=swap_pages > 0,
+            admissible=need <= (self.allocator.free_count()
+                                + self._reclaimable(exclude_key=pool_key)))
+
     def can_admit(self, tokens: np.ndarray, tag: int | None = None) -> bool:
         """Admission check: free frames plus what draining the retention
         pool would free must cover the request's immediate need.  A
         retained entry the prefix match would share from is NOT drainable
         headroom -- its pages have to stay resident to be shared."""
-        need, pool_key = self._admit_need(tokens, tag)
-        return need <= (self.allocator.free_count()
-                        + self._reclaimable(exclude_key=pool_key))
+        return self.admission_cost(tokens, tag).admissible
 
     # -- sequence lifecycle ---------------------------------------------------
     def begin_seq(self, seq: int, tokens: np.ndarray) -> int:

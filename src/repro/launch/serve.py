@@ -15,7 +15,7 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.models.model import Model
 from repro.serve.engine import EngineConfig, Request, ServeEngine
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import Scheduler, SchedulerConfig
 
 
 def main() -> None:
@@ -29,6 +29,14 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--paged", action="store_true",
                     help="use the emulated-memory paged KV layout")
+    ap.add_argument("--sched-window", type=int,
+                    default=SchedulerConfig.window,
+                    help="residency-aware admission reorder window "
+                         "(1 = strict FIFO)")
+    ap.add_argument("--aging-steps", type=int,
+                    default=SchedulerConfig.aging_steps,
+                    help="decode steps a passed-over request waits before "
+                         "it outranks every admission score")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -48,7 +56,8 @@ def main() -> None:
 
     engine = ServeEngine(model, params, EngineConfig(
         slots=args.slots, max_len=args.max_len))
-    sched = Scheduler(engine)
+    sched = Scheduler(engine, SchedulerConfig(window=args.sched_window,
+                                              aging_steps=args.aging_steps))
     sched.submit(reqs)
     t0 = time.monotonic()
     done = sched.run()

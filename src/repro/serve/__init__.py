@@ -1,2 +1,2 @@
 from repro.serve.engine import EngineConfig, Request, ServeEngine  # noqa: F401
-from repro.serve.scheduler import Scheduler  # noqa: F401
+from repro.serve.scheduler import Scheduler, SchedulerConfig  # noqa: F401

@@ -104,6 +104,12 @@ class ServeEngine:
                                                     write_mask=m))
         #: requests preempted since the last drain (scheduler requeues them)
         self.preempted: list[Request] = []
+        #: requests completed since the last drain (scheduler accounts
+        #: them).  Completion can happen inside admission-time preemption,
+        #: before the request ever appears in a scheduler slot snapshot, so
+        #: polling ``slot_req`` around ``step()`` misses it -- the engine is
+        #: the only party that sees every completion
+        self.completed_reqs: list[Request] = []
         self._admit_seq = np.zeros(ecfg.slots, np.int64)  # admission order
         self._admit_counter = 0
         #: positions per slot whose KV writes have actually committed (the
@@ -281,6 +287,7 @@ class ServeEngine:
             self._release(slot)
             req.done = True
             self.counters["completed"] += 1
+            self.completed_reqs.append(req)
             return
         if self.blocks is not None:
             tag = id(req)
@@ -299,6 +306,13 @@ class ServeEngine:
 
     def drain_preempted(self) -> list[Request]:
         out, self.preempted = self.preempted, []
+        return out
+
+    def drain_completed(self) -> list[Request]:
+        """Requests completed since the last drain, wherever the completion
+        happened (a decode step or a preemption that found the final token
+        already landed)."""
+        out, self.completed_reqs = self.completed_reqs, []
         return out
 
     def _release(self, slot: int) -> None:
@@ -356,7 +370,17 @@ class ServeEngine:
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    def can_admit(self, req: Request) -> bool:
+    def admission_cost(self, req: Request):
+        """Residency cost terms for admitting ``req`` right now (an
+        :class:`repro.emem_vm.AdmissionCost`), or None when there is no
+        BlockManager (the batch layout carries no residency signal and any
+        score built on top must degenerate to FIFO)."""
+        if self.blocks is None:
+            return None
+        return self.blocks.admission_cost(self._tokens_for(req),
+                                          tag=self._swap_tag(req))
+
+    def can_admit(self, req: Request, cost=None) -> bool:
         """Admission control: the request must fit the engine at all (room
         for at least one generated token under max_len) and have a free
         slot.  With a frame pool, admission is *optimistic*: only the pages
@@ -364,7 +388,9 @@ class ServeEngine:
         pool and the live prefix match, or the swap record for a preempted
         request -- must be coverable, counting what reclaiming retained
         pages would free.  Decode-time growth is covered by preemption, not
-        a worst-case reservation."""
+        a worst-case reservation.  ``cost`` may pass an
+        :meth:`admission_cost` result already in hand (the scheduler
+        scores and checks every window candidate off one query)."""
         toks = self._tokens_for(req)
         if len(toks) > self.ecfg.max_len - 2:
             return False
@@ -372,7 +398,9 @@ class ServeEngine:
             return False
         if self.blocks is None:
             return True
-        return self.blocks.can_admit(toks, tag=self._swap_tag(req))
+        if cost is None:
+            cost = self.blocks.admission_cost(toks, tag=self._swap_tag(req))
+        return cost.admissible
 
     def admit(self, req: Request, slot: int) -> None:
         """Admit a request into a slot.
@@ -508,5 +536,6 @@ class ServeEngine:
                 req.done = True
                 self.slot_req[i] = None
                 self.counters["completed"] += 1
+                self.completed_reqs.append(req)
                 self._kv_committed[i] = 0
                 self._release(i)

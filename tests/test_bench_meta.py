@@ -1,0 +1,73 @@
+"""BENCH_vm.json bookkeeping: meta stamps, history-preserving merge, and
+the >15% headline-regression gate (satellites of the scheduling PR)."""
+import json
+
+import pytest
+
+vm_bench = pytest.importorskip("benchmarks.vm_bench")
+
+
+@pytest.fixture
+def bench_path(tmp_path, monkeypatch):
+    path = tmp_path / "BENCH_vm.json"
+    monkeypatch.setattr(vm_bench, "_JSON_PATH", str(path))
+    return path
+
+
+def _rec(prefix=2.0, swap=1.6, sched=1.9):
+    return {"prefix_sharing": {"concurrency_ratio": prefix},
+            "swap": {"decode_step_ratio": swap},
+            "scheduling": {"tokens_per_step_ratio": sched}}
+
+
+def test_write_stamps_meta_and_keeps_history(bench_path):
+    bench_path.write_text(json.dumps(_rec(prefix=1.5)))
+    vm_bench._write(_rec(), smoke=False)
+    out = json.loads(bench_path.read_text())
+    assert out["meta"]["git_rev"] and "smoke" in out["meta"]
+    # the prior run's headline numbers moved into history, not the void
+    assert len(out["history"]) == 1
+    assert out["history"][0]["prefix_sharing_concurrency_ratio"] == 1.5
+    assert out["prefix_sharing"]["concurrency_ratio"] == 2.0
+
+
+def test_history_dedups_by_git_rev_and_is_bounded(bench_path):
+    vm_bench._write(_rec(prefix=1.0), smoke=False)
+    for i in range(3):                   # re-runs at the same (dirty) rev
+        vm_bench._write(_rec(prefix=1.0 + i), smoke=False)
+    out = json.loads(bench_path.read_text())
+    # same git rev replaces its own history entry instead of accumulating
+    assert len(out["history"]) == 1
+    history = [{"meta": {"git_rev": f"r{i}"}, "x": i} for i in range(100)]
+    bench_path.write_text(json.dumps({**_rec(), "history": history}))
+    vm_bench._write(_rec(), smoke=False)
+    out = json.loads(bench_path.read_text())
+    assert len(out["history"]) <= vm_bench._HISTORY_LIMIT
+
+
+def test_smoke_merge_keeps_full_run_sections(bench_path):
+    full = {**_rec(), "vread_us_nocache": 123.0,
+            "utilization": [{"seq_len": 128}],
+            "meta": {"git_rev": "aaaa", "smoke": False}}
+    bench_path.write_text(json.dumps(full))
+    vm_bench._write({"swap": {"decode_step_ratio": 1.7}}, smoke=True)
+    out = json.loads(bench_path.read_text())
+    # smoke refreshed its section but the full-run numbers survived
+    assert out["swap"]["decode_step_ratio"] == 1.7
+    assert out["vread_us_nocache"] == 123.0 and "utilization" in out
+    assert out["meta"]["smoke"] is True
+    assert out["history"][0]["meta"]["git_rev"] == "aaaa"
+
+
+def test_gate_fails_on_regression_only(bench_path):
+    bench_path.write_text(json.dumps(_rec(prefix=2.0, swap=1.6, sched=1.9)))
+    # within 15%: no failure
+    assert vm_bench.check_gate(_rec(prefix=1.8, swap=1.5, sched=1.7)) == []
+    # beyond 15%: named failure per regressed metric
+    fails = vm_bench.check_gate(_rec(prefix=1.0, swap=1.6, sched=1.0))
+    assert len(fails) == 2
+    assert any("prefix_sharing" in f for f in fails)
+    assert any("scheduling" in f for f in fails)
+    # metrics absent from the baseline are skipped (older baselines)
+    bench_path.write_text(json.dumps({"swap": {"decode_step_ratio": 1.6}}))
+    assert vm_bench.check_gate(_rec(prefix=0.1, swap=1.6, sched=0.1)) == []

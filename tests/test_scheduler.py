@@ -1,0 +1,339 @@
+"""Residency-aware admission scheduling: policy, pricing, and the
+completion-accounting fixes.
+
+The serving-engine integration tests live in test_models.py; this module
+covers the scheduler policy layer -- window reordering, aging, FIFO
+degeneracy -- and the admission-cost query it is built on.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_dense_cfg
+from repro.core import emulation
+from repro.models import Model
+
+
+def _pooled_cfg(pool_pages=None, layout="pooled"):
+    return tiny_dense_cfg(vocab_size=64, kv_layout=layout, kv_page_slots=4,
+                          kv_pool_pages=pool_pages)
+
+
+def _engine(pool_pages=24, slots=4, max_len=32, layout="pooled", **ecfg_kw):
+    from repro.serve import EngineConfig, ServeEngine
+    cfg = _pooled_cfg(pool_pages=pool_pages, layout=layout)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return ServeEngine(model, params,
+                       EngineConfig(slots=slots, max_len=max_len, **ecfg_kw))
+
+
+def _drive_one(sched):
+    """One scheduler loop iteration, exactly as Scheduler.run does it."""
+    sched._admit_waiting()
+    sched.engine.step()
+    sched._requeue_preempted()
+    sched._drain_completed()
+    for req in sched.queue:
+        sched._age[id(req)] = sched._age.get(id(req), 0) + 1
+
+
+def _track_admissions(engine):
+    """Record the uid of every request the engine admits, in order."""
+    order = []
+    orig = engine.admit
+
+    def admit(req, slot):
+        order.append(req.uid)
+        return orig(req, slot)
+
+    engine.admit = admit
+    return order
+
+
+# -- the admission-cost query ------------------------------------------------
+def test_admission_cost_terms(rng):
+    from repro.emem_vm import AdmissionCost, BlockManager
+
+    bm = BlockManager(n_frames=8, n_seqs=2, max_lpages=4, page_slots=4,
+                      policy="on_demand", share_prefixes=True)
+    cold = bm.admission_cost(np.arange(10, dtype=np.int32))
+    assert cold == AdmissionCost(new_frames=3, shared_tokens=0,
+                                 swap_in_pages=0, has_swap=False,
+                                 admissible=True)
+    # a live donor makes the common prefix resident
+    prompt = np.arange(10, dtype=np.int32)
+    bm.begin_seq(0, prompt)
+    for pos in range(len(prompt)):
+        bm.ensure_writable(0, pos)
+    hot = bm.admission_cost(np.concatenate(
+        [prompt, np.asarray([60, 61], np.int32)]))
+    assert hot.shared_tokens == 10 and not hot.has_swap
+    assert hot.new_frames < cold.new_frames
+    # the query is pure: asking must not touch any state
+    assert bm.admission_cost(prompt).shared_tokens == 10
+    assert bm.allocator.free_count() == 8 - 3
+
+
+def test_admission_cost_swap_record(rng):
+    """A parked swap record prices as PCIe pages, not prefill frames."""
+    engine = _engine(pool_pages=4, slots=2)
+    engine.blocks.share_prefixes = False
+    from repro.serve import Request
+    req = Request(uid=0, prompt=rng.integers(0, 64, 8).astype(np.int32),
+                  max_new_tokens=8)
+    engine.admit(req, 0)
+    lengths = np.array(engine.lengths)
+    engine._preempt(0, lengths)
+    assert engine.counters["swapped"] == 1
+    cost = engine.admission_cost(req)
+    assert cost.has_swap and cost.swap_in_pages == 2
+    assert cost.new_frames == 2 and cost.shared_tokens == 0
+    engine.drain_preempted()
+    engine.blocks.drop_swap(id(req))
+    engine.shutdown()
+
+
+def test_admission_cost_reserved_is_zero(rng):
+    """The reserved policy has no residency signal: every term is zero, so
+    any score built on it degenerates to FIFO."""
+    from repro.emem_vm import AdmissionCost
+    engine = _engine(layout="paged", pool_pages=None, slots=2)
+    from repro.serve import Request
+    req = Request(uid=0, prompt=rng.integers(0, 64, 8).astype(np.int32),
+                  max_new_tokens=4)
+    assert engine.admission_cost(req) == AdmissionCost(
+        new_frames=0, shared_tokens=0, swap_in_pages=0, has_swap=False,
+        admissible=True)
+    engine.shutdown()
+
+
+def test_admission_score_pricing():
+    """Pricing sanity: retained prefixes beat cold, swap-resume beats cold,
+    and the PCIe term is charged against the resume's savings."""
+    host = emulation.HostTierConfig()
+    cold = emulation.admission_score(0, 0, 4, host=host)
+    hot = emulation.admission_score(12, 0, 4, host=host)
+    resume = emulation.admission_score(0, 2, 4, host=host)
+    assert cold == 0.0
+    assert hot > resume > cold        # 12 shared tokens > 8 resumed tokens
+    no_pcie = 2 * 4 * emulation.PREFILL_CYCLES_PER_TOKEN
+    assert resume == no_pcie - 2 * host.page_in_cycles()
+    assert host.page_in_cycles() < host.roundtrip_cycles()
+
+
+# -- window reordering -------------------------------------------------------
+def _hot_cold_workload(rng, window, aging_steps=10_000):
+    """A retained system prompt, a cold head too big to matter, hot-prefix
+    traffic behind it.  Returns (admission uid order, per-uid outputs)."""
+    from repro.serve import Request, Scheduler, SchedulerConfig
+    system = rng.integers(0, 64, 12).astype(np.int32)
+    cold_prompt = rng.integers(0, 64, 24).astype(np.int32)
+    hots = [np.concatenate([system,
+                            rng.integers(0, 64, 2).astype(np.int32)])
+            for _ in range(4)]
+    with _engine(pool_pages=12, slots=4, retain_frames=4) as engine:
+        sched = Scheduler(engine, SchedulerConfig(window=window,
+                                                  aging_steps=aging_steps))
+        # warmup retains the system prompt across the idle gap
+        sched.submit([Request(uid=99, prompt=system, max_new_tokens=2)])
+        sched.run()
+        order = _track_admissions(engine)
+        sched.submit([Request(uid=0, prompt=cold_prompt, max_new_tokens=4)]
+                     + [Request(uid=1 + i, prompt=p, max_new_tokens=4)
+                        for i, p in enumerate(hots)])
+        done = sched.run()
+    return order, {r.uid: tuple(r.output) for r in done if r.uid != 99}
+
+
+def test_window1_reproduces_fifo_token_for_token(rng):
+    """window=1 admits in exact submission order (the pre-policy FIFO), a
+    wider window reorders -- and per-request tokens are identical."""
+    fifo_order, fifo_out = _hot_cold_workload(rng, window=1)
+    rng2 = np.random.default_rng(0)
+    reord_order, reord_out = _hot_cold_workload(rng2, window=8)
+
+    def first_admissions(order):     # preempted requests re-admit: dedup
+        return list(dict.fromkeys(order))
+
+    assert fifo_order[0] == 0              # FIFO: the cold head goes first
+    assert first_admissions(fifo_order) == sorted(set(fifo_order))
+    assert reord_order[0] != 0             # residency-aware: a hot one does
+    assert first_admissions(reord_order) != first_admissions(fifo_order)
+    assert fifo_out == reord_out           # token identity per request
+    assert set(fifo_order) == set(reord_order)   # nobody dropped
+
+
+def test_reorder_prefers_retained_prefix_hits(rng):
+    """The tentpole behavior: hot-prefix requests are admitted while their
+    pages are resident (retained hits observed), ahead of a cold request
+    that arrived first."""
+    from repro.serve import Request, Scheduler, SchedulerConfig
+    system = rng.integers(0, 64, 12).astype(np.int32)
+    with _engine(pool_pages=12, slots=2, retain_frames=4) as engine:
+        sched = Scheduler(engine, SchedulerConfig(window=4))
+        sched.submit([Request(uid=0, prompt=system, max_new_tokens=2)])
+        sched.run()
+        assert engine.blocks.stats()["retained_entries"] == 1
+        cold = Request(uid=1, prompt=rng.integers(0, 64, 8).astype(np.int32),
+                       max_new_tokens=2)
+        hot = Request(uid=2, prompt=np.concatenate(
+            [system, rng.integers(0, 64, 2).astype(np.int32)]),
+            max_new_tokens=2)
+        assert sched._score(hot) > sched._score(cold) == 0.0
+        order = _track_admissions(engine)
+        sched.submit([cold, hot])
+        sched.run()
+    assert order[0] == 2 and engine.blocks.counters["retained_hits"] >= 1
+    assert engine.shutdown()["leaked_frames"] == 0
+
+
+def test_reserved_policy_degenerates_to_fifo(rng):
+    """kv_layout="paged" (reserved tables) has no residency signal: even a
+    wide window admits in exact submission order."""
+    from repro.serve import Request, Scheduler, SchedulerConfig
+    engine = _engine(layout="paged", pool_pages=None, slots=2)
+    order = _track_admissions(engine)
+    sched = Scheduler(engine, SchedulerConfig(window=8))
+    sched.submit([Request(uid=i,
+                          prompt=rng.integers(0, 64, 4 + i).astype(np.int32),
+                          max_new_tokens=3) for i in range(5)])
+    done = sched.run()
+    assert order == sorted(order) and len(done) == 5
+    engine.shutdown()
+
+
+# -- aging / starvation ------------------------------------------------------
+def _sustained_hot_traffic(rng, aging_steps, max_steps=40):
+    """A cold request queued behind an endless hot-prefix stream; returns
+    the number of decode steps until it was admitted (None: starved)."""
+    from repro.serve import Request, Scheduler, SchedulerConfig
+    system = rng.integers(0, 64, 12).astype(np.int32)
+    with _engine(pool_pages=32, slots=2, retain_frames=4) as engine:
+        sched = Scheduler(engine, SchedulerConfig(window=4,
+                                                  aging_steps=aging_steps))
+        sched.submit([Request(uid=99, prompt=system, max_new_tokens=2)])
+        sched.run()
+        cold = Request(uid=0, prompt=rng.integers(0, 64, 6).astype(np.int32),
+                       max_new_tokens=2)
+        sched.submit([cold])
+        admitted_at = None
+        uid = 100
+        for step in range(max_steps):
+            # keep the hot supply standing: always >= 2 waiting hots
+            while sum(1 for r in sched.queue if r is not cold) < 2:
+                sched.submit([Request(uid=uid, prompt=np.concatenate(
+                    [system, rng.integers(0, 64, 2).astype(np.int32)]),
+                    max_new_tokens=2)])
+                uid += 1
+            _drive_one(sched)
+            if admitted_at is None and cold not in sched.queue:
+                admitted_at = step
+                break
+        # drain: stop feeding, let everything finish
+        sched.run()
+    engine.shutdown()
+    return admitted_at
+
+
+def test_aging_bounds_starvation(rng):
+    """Satellite acceptance: under sustained hot-prefix traffic a cold
+    request admits within aging_steps (plus the wait for a slot to free),
+    while without the aging term it starves indefinitely."""
+    aging = 6
+    admitted_at = _sustained_hot_traffic(rng, aging_steps=aging)
+    assert admitted_at is not None, "cold request starved despite aging"
+    assert admitted_at <= aging + 4, admitted_at   # +max_new+slack for a slot
+    starved = _sustained_hot_traffic(np.random.default_rng(0),
+                                     aging_steps=10_000)
+    assert starved is None, f"expected starvation, admitted at {starved}"
+
+
+# -- completion accounting ---------------------------------------------------
+def test_completion_during_admission_preemption_is_accounted(rng):
+    """Satellite regression: a request finished by ``_is_complete`` inside
+    a preemption -- before it was ever observable in a between-steps slot
+    snapshot -- must still land in scheduler.completed.  (The old
+    implementation collected completions from a before-step snapshot of
+    ``slot_req`` and lost exactly this case.)"""
+    from repro.serve import Request, Scheduler
+    engine = _engine(pool_pages=16, slots=2)
+    sched = Scheduler(engine)
+    req = Request(uid=0, prompt=rng.integers(0, 64, 5).astype(np.int32),
+                  max_new_tokens=3)
+    sched.submit([req])
+    sched._admit_waiting()               # admitted; run() has no snapshot yet
+    engine.step()
+    engine.step()
+    # pool-exhaustion preemption lands exactly on the final token: the
+    # step loop appended it but the pool ran dry before the decode
+    req.output.append(req._next)
+    lengths = np.array(engine.lengths)
+    lengths[0] += 1
+    engine._preempt(0, lengths)
+    assert req.done and engine.drain_preempted() == []
+    done = sched.run()                   # no steps left to run
+    assert done == [req] and len(req.output) == 3
+    assert engine.shutdown()["completed"] == 1
+
+
+def test_preempt_completion_mid_churn_is_accounted(rng):
+    """End-to-end: under heavy pool churn (preemptions landing on final
+    tokens included) every submitted request is accounted exactly once in
+    scheduler.completed."""
+    from repro.serve import Request, Scheduler
+    prompts = [rng.integers(0, 64, int(rng.integers(3, 8))).astype(np.int32)
+               for _ in range(6)]
+    with _engine(pool_pages=10, slots=6) as engine:
+        engine.blocks.share_prefixes = False
+        sched = Scheduler(engine)
+        sched.submit([Request(uid=i, prompt=p, max_new_tokens=6)
+                      for i, p in enumerate(prompts)])
+        done = sched.run()
+    stats = engine.shutdown()
+    assert sorted(r.uid for r in done) == list(range(6))
+    assert stats["completed"] == 6 and stats["preempted"] > 0
+
+
+# -- free-slot re-query ------------------------------------------------------
+def test_admission_fills_slots_freed_mid_pass(rng):
+    """Satellite regression: an admission that self-preempts (resume grows
+    past its swap record into an exhausted pool) frees its slot mid-pass;
+    the next waiting request must be admitted in the SAME pass, not a
+    decode step later."""
+    from repro.serve import Request, Scheduler, SchedulerConfig
+    engine = _engine(pool_pages=4, slots=2, max_len=16)
+    engine.blocks.share_prefixes = False
+    sched = Scheduler(engine, SchedulerConfig(window=4))
+    a = Request(uid=0, prompt=rng.integers(0, 64, 4).astype(np.int32),
+                max_new_tokens=10)
+    b = Request(uid=1, prompt=rng.integers(0, 64, 8).astype(np.int32),
+                max_new_tokens=4)
+    d = Request(uid=2, prompt=rng.integers(0, 64, 2).astype(np.int32),
+                max_new_tokens=4)
+    sched.submit([a, b, d])
+    sched._admit_waiting()               # A and B admitted, D has no slot
+    assert engine.slot_req[0] is a and engine.slot_req[1] is b
+    _drive_one(sched)                    # B (youngest) preempted to host
+    assert engine.counters["swapped"] == 1 and b in sched.queue
+    sched._admit_waiting()
+    # B's resume restored its pages but self-preempted growing into the
+    # exhausted pool -- its slot must have been handed to D immediately
+    assert engine.counters["swap_resumed"] == 1
+    assert engine.counters["swapped"] == 2
+    assert any(r is d for r in engine.slot_req), \
+        "slot freed by a mid-pass preemption was not refilled"
+    done = sched.run()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    # token identity vs a roomy pool
+    with _engine(pool_pages=32, slots=3, max_len=16) as roomy:
+        roomy.blocks.share_prefixes = False
+        s2 = Scheduler(roomy)
+        reqs = [Request(uid=r.uid, prompt=r.prompt,
+                        max_new_tokens=r.max_new_tokens) for r in (a, b, d)]
+        s2.submit(reqs)
+        ref = {r.uid: tuple(r.output) for r in s2.run()}
+    assert {r.uid: tuple(r.output) for r in done} == ref
+    engine.shutdown()
