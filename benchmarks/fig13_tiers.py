@@ -1,0 +1,30 @@
+"""Three-tier sweep: slowdown vs the fraction of host faults served from
+the spill tier, under the DHRYSTONE mix.
+
+The residency extension of the paper's Fig. 10 family, one more level down:
+a ``host_frac`` share of cache-missing global accesses fault to host DRAM
+(PCIe round trip), and of those a swept ``spill_frac`` share find their
+page demoted on down to the file/bytes-backed spill store and pay its round
+trip as well -- the two-hop promotion the serving engine's tiered-churn
+workload measures.  ``spill_frac=0`` reproduces the two-tier model exactly.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, timeit
+from repro.core import emulation
+
+
+def rows() -> list[dict]:
+    out = []
+    for system in (1024, 4096):
+        us = timeit(emulation.fig_tier_sweep, system)
+        sweep = emulation.fig_tier_sweep(system)
+        for i, f in enumerate(sweep["spill_frac"]):
+            out.append(row(
+                f"fig13/{system}sys/spill{f:.2f}", us if i == 0 else 0.0,
+                f"clos={sweep['clos'][i]:.2f} mesh={sweep['mesh'][i]:.2f}"))
+        out.append(row(
+            f"fig13/{system}sys/fault_cycles", 0.0,
+            f"host={sweep['host_fault_cycles']:.0f} "
+            f"spill={sweep['spill_fault_cycles']:.0f}"))
+    return out

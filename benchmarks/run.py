@@ -12,11 +12,11 @@ from benchmarks.common import print_csv
 def main() -> None:
     from benchmarks import (emem_bench, fig5_chip_area, fig6_components,
                             fig7_interposer, fig9_latency, fig10_slowdown,
-                            fig11_mix_sweep, fig12_cache, kernel_bench,
-                            roofline, tab_binary_size, vm_bench)
+                            fig11_mix_sweep, fig12_cache, fig13_tiers,
+                            kernel_bench, roofline, tab_binary_size, vm_bench)
     modules = [fig5_chip_area, fig6_components, fig7_interposer, fig9_latency,
-               fig10_slowdown, fig11_mix_sweep, fig12_cache, tab_binary_size,
-               emem_bench, vm_bench, kernel_bench, roofline]
+               fig10_slowdown, fig11_mix_sweep, fig12_cache, fig13_tiers,
+               tab_binary_size, emem_bench, vm_bench, kernel_bench, roofline]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     rows = []
     for m in modules:

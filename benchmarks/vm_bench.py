@@ -2,9 +2,11 @@
 pooled-vs-fixed slot utilization, the shared-prefix serving workload
 (N requests x one system prompt through the real engine + BlockManager),
 the swap/churn workload (preempt+swap+restore vs recompute, plus the
-retained-prefix hit rate across an idle gap), and the residency-aware
-scheduling workload (mixed hot-prefix/cold traffic: bounded-window
-admission reordering vs FIFO at equal KV bytes).
+retained-prefix hit rate across an idle gap), the tiered-churn workload
+(host pool sized to force HOST -> SPILL demotion; spill-resume vs
+recompute), and the residency-aware scheduling workload (mixed
+hot-prefix/cold traffic: bounded-window admission reordering vs FIFO at
+equal KV bytes).
 
 Also consolidates the results into ``BENCH_vm.json`` at the repo root so the
 perf trajectory of the virtual-memory subsystem is tracked PR over PR: every
@@ -131,14 +133,15 @@ def _utilization_rows(record: dict) -> list[dict]:
 # ---------------------------------------------------------------------------
 # Shared-prefix serving workload (real engine, BlockManager path)
 # ---------------------------------------------------------------------------
-def _tiny_model(pool_pages: int = 20):
+def _tiny_model(pool_pages: int = 20, layout: str = "pooled"):
     from repro.models import Model, ModelConfig
     cfg = ModelConfig(name="bench-tiny", family="dense", n_layers=2,
                       d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
                       d_ff=128, vocab_size=64, param_dtype="float32",
                       compute_dtype="float32", attn_chunk_q=16,
-                      attn_chunk_k=16, kv_layout="pooled", kv_page_slots=4,
-                      kv_pool_pages=pool_pages)
+                      attn_chunk_k=16, kv_layout=layout, kv_page_slots=4,
+                      kv_pool_pages=pool_pages if layout == "pooled"
+                      else None)
     model = Model(cfg)
     return model, model.init(jax.random.key(0))
 
@@ -234,17 +237,20 @@ def _prefix_rows(record: dict, smoke: bool = False) -> list[dict]:
 # Swap/churn workload (preempt+swap+restore vs recompute; retained prefixes)
 # ---------------------------------------------------------------------------
 def _run_churn(preempt_mode: str, prompts, max_new: int, slots: int,
-               pool: int):
+               pool: int, host_frames: int | None = None,
+               spill_frames: int = 0, layout: str = "pooled"):
     """Drive a pool too tight for everyone's worst case to completion and
     report (outputs, stats, wall_us)."""
     import time
 
     from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
-    model, params = _tiny_model(pool_pages=pool)
+    model, params = _tiny_model(pool_pages=pool, layout=layout)
     t0 = time.perf_counter()
     with ServeEngine(model, params,
                      EngineConfig(slots=slots, max_len=32,
-                                  preempt_mode=preempt_mode)) as engine:
+                                  preempt_mode=preempt_mode,
+                                  host_frames=host_frames,
+                                  spill_frames=spill_frames)) as engine:
         engine.blocks.share_prefixes = False      # churn, not sharing
         sched = Scheduler(engine)
         sched.submit([Request(uid=i, prompt=p, max_new_tokens=max_new)
@@ -300,6 +306,67 @@ def _swap_rows(record: dict, smoke: bool = False) -> list[dict]:
             f"{st_swap['swap_out_pages']} out / "
             f"{st_swap['swap_in_pages']} in across "
             f"{st_swap['seq_swaps']} evictions"),
+    ]
+
+
+def _tiered_rows(record: dict, smoke: bool = False) -> list[dict]:
+    """Tiered-churn workload: the host pool is sized so swap traffic MUST
+    demote host pages into the third-tier spill store (the host tier as an
+    actively managed cache, not a fixed pool).  Spill-resume -- including
+    two-hop SPILL -> HOST -> DEVICE promotions -- must be token-identical
+    to the recompute baseline and to the reserved ("paged") policy run,
+    and strictly cheaper in decode steps; with ``spill_frames=0`` the
+    host-full path falls back to recompute exactly as before (asserted by
+    the host-full fallback run).  Same size in smoke and full runs, so the
+    smoke numbers gate against the committed baseline."""
+    rng = np.random.default_rng(6)
+    n_req, pool, host, spill = 8, 10, 2, 32
+    prompts = [rng.integers(0, 64, int(rng.integers(3, 8))).astype(np.int32)
+               for _ in range(n_req)]
+    out_sp, st_sp, us_sp = _run_churn("swap", prompts, 6, n_req, pool,
+                                      host_frames=host, spill_frames=spill)
+    out_rec, st_rec, us_rec = _run_churn("recompute", prompts, 6, n_req,
+                                         pool)
+    # reserved ("paged") policy never preempts: the unpreempted reference
+    out_paged, _, _ = _run_churn("swap", prompts, 6, n_req, pool,
+                                 layout="paged")
+    assert out_sp == out_rec == out_paged, \
+        "spill-resume changed decoded tokens"
+    assert st_sp["host_demotions"] > 0 and st_sp["spill_out_pages"] > 0, \
+        "host pool did not come under demotion pressure"
+    assert st_sp["spill_in_pages"] > 0, "no two-hop promotion exercised"
+    assert st_sp["decode_steps"] < st_rec["decode_steps"], (
+        f"spill resume ({st_sp['decode_steps']} decode steps) not cheaper "
+        f"than recompute ({st_rec['decode_steps']})")
+    # host-full fallback with the spill tier DISABLED: recompute, identical
+    out_fb, st_fb, _ = _run_churn("swap", prompts, 6, n_req, pool,
+                                  host_frames=1, spill_frames=0)
+    assert out_fb == out_rec, "host-full fallback changed decoded tokens"
+    assert st_fb["preempted"] > 0
+    record["tiered"] = {
+        "requests": n_req, "pool_pages": pool, "host_frames": host,
+        "spill_frames": spill,
+        "host_demotions": st_sp["host_demotions"],
+        "spill_out_pages": st_sp["spill_out_pages"],
+        "spill_in_pages": st_sp["spill_in_pages"],
+        "swap_out_pages": st_sp["swap_out_pages"],
+        "decode_steps_spill": st_sp["decode_steps"],
+        "decode_steps_recompute": st_rec["decode_steps"],
+        "decode_step_ratio": round(
+            st_rec["decode_steps"] / max(st_sp["decode_steps"], 1), 3),
+        "wall_us_spill": round(us_sp, 1),
+        "wall_us_recompute": round(us_rec, 1),
+        "fallback_preemptions": st_fb["preempted"],
+    }
+    return [
+        row("vm/tiered/decode_steps", 0.0,
+            f"spill={st_sp['decode_steps']} "
+            f"recompute={st_rec['decode_steps']} "
+            f"({record['tiered']['decode_step_ratio']}x saved)"),
+        row("vm/tiered/pages", 0.0,
+            f"{st_sp['spill_out_pages']} demoted / "
+            f"{st_sp['spill_in_pages']} promoted across "
+            f"{st_sp['host_demotions']} host-pressure events"),
     ]
 
 
@@ -436,12 +503,14 @@ def _sched_rows(record: dict, smoke: bool = False) -> list[dict]:
 # BENCH_vm.json bookkeeping: meta stamps, history, regression gate
 # ---------------------------------------------------------------------------
 #: sections re-measured identically by smoke runs (mergeable + gateable)
-_SERVING_SECTIONS = ("prefix_sharing", "swap", "retention", "scheduling")
+_SERVING_SECTIONS = ("prefix_sharing", "swap", "tiered", "retention",
+                     "scheduling")
 #: headline metric per section for history and the regression gate
 #: (all higher-is-better)
 _HEADLINES = {
     "prefix_sharing": "concurrency_ratio",
     "swap": "decode_step_ratio",
+    "tiered": "decode_step_ratio",
     "retention": "retained_hit_rate",
     "scheduling": "tokens_per_step_ratio",
 }
@@ -515,14 +584,23 @@ def check_gate(record: dict, max_regression: float = 0.15) -> list[str]:
     """Compare this run's headline numbers against the committed baseline;
     return a list of failure messages for metrics that regressed by more
     than ``max_regression`` (all headline metrics are higher-is-better).
-    Metrics absent from either side are skipped, so the gate tolerates a
-    baseline predating a workload."""
+
+    Metrics absent from the BASELINE are skipped (the gate tolerates a
+    baseline predating a workload), but a baseline metric missing from the
+    CURRENT run is a failure: a workload that silently stops emitting its
+    headline number would otherwise pass the gate exactly when it is most
+    broken."""
     baseline = _load_baseline()
     failures = []
     for sec, key in _HEADLINES.items():
         base = baseline.get(sec, {})
+        if not (isinstance(base, dict) and key in base):
+            continue                     # baseline predates this workload
         cur = record.get(sec, {})
-        if not (isinstance(base, dict) and key in base and key in cur):
+        if not (isinstance(cur, dict) and key in cur):
+            failures.append(
+                f"{sec}.{key}: baseline has {base[key]} but the current "
+                f"run emitted no value (workload silently dropped?)")
             continue
         floor = float(base[key]) * (1.0 - max_regression)
         if float(cur[key]) < floor:
@@ -537,7 +615,8 @@ def collect(smoke: bool = False) -> tuple[list[dict], dict]:
     record: dict = {}
     out = (_throughput_rows(record, smoke) + _utilization_rows(record)
            + _prefix_rows(record, smoke) + _swap_rows(record, smoke)
-           + _retention_rows(record, smoke) + _sched_rows(record, smoke))
+           + _tiered_rows(record, smoke) + _retention_rows(record, smoke)
+           + _sched_rows(record, smoke))
     return out, record
 
 

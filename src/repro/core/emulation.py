@@ -114,6 +114,61 @@ class HostTierConfig:
         return (self.pcie_latency_us * 1e-6 + xfer_s) * clock_ghz * 1e9
 
 
+@dataclasses.dataclass(frozen=True)
+class SpillTierConfig:
+    """The third tier: a file/bytes-backed spill store one hop below host
+    DRAM (disk / NVMe / remote memory).
+
+    Extends the hierarchy the same way :class:`HostTierConfig` does -- each
+    tier spills to the next-cheaper one under a cost model instead of
+    falling off the hierarchy (the recompute cliff this tier exists to
+    price away).  A page parked here is *two* hops from the device: a
+    restore pays the spill read (this config) plus the host->device PCIe
+    transfer (:class:`HostTierConfig`), which is exactly how
+    :func:`admission_score` prices a two-hop resume.
+
+    ``spill_frac`` is the fraction of host-tier faults whose page was
+    demoted on down to the spill store -- the host-pressure knob a
+    workload measures (cf. the BlockManager's ``spill_out_pages`` /
+    ``swap_out_pages`` counters).
+
+    Defaults model a remote-memory / fast-NVMe-read-class device (~10 us
+    to first byte): slow enough that the extra hop visibly demotes a
+    two-hop resume below an all-host one in :func:`admission_score`, fast
+    enough that it still beats re-prefilling the pages' tokens -- the
+    inequality that makes the tier worth having at all.
+    """
+    read_gbps: float = 3.0           # sequential read bandwidth (NVMe-class)
+    write_gbps: float = 1.5          # sequential write bandwidth
+    latency_us: float = 10.0         # per-op software + media latency
+    page_kb: float = 4.0             # spill granularity (one frame)
+    spill_frac: float = 0.0          # host faults served from the spill tier
+
+    def __post_init__(self):
+        if not (0.0 <= self.spill_frac <= 1.0):
+            raise ValueError("spill_frac must be in [0, 1]")
+        if self.read_gbps <= 0.0 or self.write_gbps <= 0.0:
+            raise ValueError("spill bandwidths must be positive")
+
+    def page_in_cycles(self, clock_ghz: float = P.CHIP.clock_ghz) -> float:
+        """Cycles to promote one page SPILL -> HOST (the extra first hop of
+        a two-hop restore; the HOST -> DEVICE leg is priced by
+        :meth:`HostTierConfig.page_in_cycles`)."""
+        xfer_s = self.page_kb * 1024 / (self.read_gbps * 1e9)
+        return (self.latency_us * 1e-6 + xfer_s) * clock_ghz * 1e9
+
+    def page_out_cycles(self, clock_ghz: float = P.CHIP.clock_ghz) -> float:
+        """Cycles to demote one page HOST -> SPILL (the demotion policy's
+        per-page price under host pressure)."""
+        xfer_s = self.page_kb * 1024 / (self.write_gbps * 1e9)
+        return (self.latency_us * 1e-6 + xfer_s) * clock_ghz * 1e9
+
+    def roundtrip_cycles(self, clock_ghz: float = P.CHIP.clock_ghz) -> float:
+        """Cycles to fault one page up from spill AND demote a victim down
+        -- the demand-fault price at a full host tier."""
+        return self.page_in_cycles(clock_ghz) + self.page_out_cycles(clock_ghz)
+
+
 def fit_hot_set_kb(traces) -> float:
     """Fit :attr:`CacheConfig.hot_set_half_kb` from measured cache traces.
 
@@ -178,17 +233,22 @@ class EmulationMachine:
     (issue overhead + network round trip), weighted by the hit rate.  With
     a :class:`HostTierConfig` the model is additionally *residency-aware*:
     a ``host_frac`` fraction of the misses fault on a page swapped out to
-    host memory and pay the page-granular PCIe round trip on top.
+    host memory and pay the page-granular PCIe round trip on top.  With a
+    :class:`SpillTierConfig` it is three-tier: a ``spill_frac`` fraction of
+    those host faults find their page demoted one level further down and
+    pay the spill round trip as well (the two-hop promotion).
     """
 
     def __init__(self, sys: lat_mod.SystemConfig, emulation_tiles: int,
                  cache: CacheConfig | None = None,
-                 host: HostTierConfig | None = None):
+                 host: HostTierConfig | None = None,
+                 spill: SpillTierConfig | None = None):
         self.sys = sys
         self.model = lat_mod.LatencyModel(sys)
         self.emulation_tiles = min(emulation_tiles, sys.n_tiles)
         self.cache = cache
         self.host = host
+        self.spill = spill
 
     def global_access_cycles(self, mix: InstructionMix) -> float:
         rt = self.model.mean_access_latency(self.emulation_tiles)
@@ -198,6 +258,9 @@ class EmulationMachine:
         miss_cycles = issue + rt
         if self.host is not None and self.host.host_frac > 0.0:
             fault = self.host.roundtrip_cycles(P.CHIP.clock_ghz)
+            if self.spill is not None and self.spill.spill_frac > 0.0:
+                fault += self.spill.spill_frac * \
+                    self.spill.roundtrip_cycles(P.CHIP.clock_ghz)
             miss_cycles += self.host.host_frac * fault
         if self.cache is None:
             return miss_cycles
@@ -213,7 +276,8 @@ def slowdown(mix: InstructionMix, network: str, system_tiles: int,
              emulation_tiles: int, mem_kb: int = 256,
              dram_capacity_gb: int | None = None,
              cache: CacheConfig | None = None,
-             host: HostTierConfig | None = None) -> float:
+             host: HostTierConfig | None = None,
+             spill: SpillTierConfig | None = None) -> float:
     """Relative slowdown of the emulation vs the sequential machine (Fig. 10).
 
     The DRAM baseline capacity defaults to the capacity of the emulated
@@ -225,7 +289,7 @@ def slowdown(mix: InstructionMix, network: str, system_tiles: int,
     seq = SequentialMachine(dram=dram_mod.DRAMSystem(capacity_gb=dram_capacity_gb))
     par = EmulationMachine(
         lat_mod.SystemConfig(network=network, n_tiles=system_tiles, mem_kb=mem_kb),
-        emulation_tiles, cache=cache, host=host)
+        emulation_tiles, cache=cache, host=host, spill=spill)
     return par.cycles_per_instruction(mix) / seq.cycles_per_instruction(mix)
 
 
@@ -306,6 +370,40 @@ def fig_swap_sweep(system_tiles: int, emulation_tiles: int | None = None,
     return out
 
 
+def fig_tier_sweep(system_tiles: int, emulation_tiles: int | None = None,
+                   mem_kb: int = 256, mix: InstructionMix = DHRYSTONE,
+                   host_frac: float = 0.01,
+                   spill_fracs: Sequence[float] = (0.0, 0.05, 0.1, 0.25,
+                                                   0.5, 1.0),
+                   host: HostTierConfig = HostTierConfig(),
+                   spill: SpillTierConfig = SpillTierConfig(),
+                   networks: tuple[str, ...] = ("clos", "mesh")) -> dict:
+    """Slowdown vs the fraction of host faults served from the spill tier
+    (the three-tier extension of the Fig. 10 family, at a fixed
+    ``host_frac`` of misses faulting off-device).
+
+    Returns ``{"spill_frac": [...], "host_fault_cycles": c_h,
+    "spill_fault_cycles": c_s, "<net>": [...]}`` -- slowdown is monotone
+    non-decreasing in ``spill_frac`` by construction, and the
+    ``spill_frac=0`` point reproduces the two-tier (host-only) model
+    exactly: each tier's model embeds the one above it, which is the
+    paper's emulation argument applied down the hierarchy.
+    """
+    emulation_tiles = emulation_tiles or system_tiles
+    host = dataclasses.replace(host, host_frac=host_frac)
+    out: dict = {"spill_frac": list(spill_fracs),
+                 "host_fault_cycles": host.roundtrip_cycles(P.CHIP.clock_ghz),
+                 "spill_fault_cycles":
+                     spill.roundtrip_cycles(P.CHIP.clock_ghz)}
+    for net in networks:
+        out[net] = [
+            slowdown(mix, net, system_tiles, emulation_tiles, mem_kb,
+                     host=host,
+                     spill=dataclasses.replace(spill, spill_frac=f))
+            for f in spill_fracs]
+    return out
+
+
 #: default §7-model price of re-prefilling one token through the serving
 #: model.  A stand-in FLOPs proxy: only the RATIO to the PCIe page cost
 #: matters for ranking admissions, and for KV-style state the rebuild
@@ -317,10 +415,12 @@ PREFILL_CYCLES_PER_TOKEN = 10_000.0
 def admission_score(shared_tokens: int, swap_in_pages: int, page_slots: int,
                     host: HostTierConfig | None = None,
                     prefill_cycles_per_token: float = PREFILL_CYCLES_PER_TOKEN,
-                    clock_ghz: float = P.CHIP.clock_ghz) -> float:
+                    clock_ghz: float = P.CHIP.clock_ghz,
+                    spill_in_pages: int = 0,
+                    spill: SpillTierConfig | None = None) -> float:
     """Price an admission's residency terms into one score (cycles saved).
 
-    The two ways an admission can exploit memory that is already where the
+    The ways an admission can exploit memory that is already where the
     work needs it:
 
       * ``shared_tokens`` leading prompt tokens are backed by resident
@@ -328,7 +428,14 @@ def admission_score(shared_tokens: int, swap_in_pages: int, page_slots: int,
         avoided outright;
       * a swap record exists: the resume skips re-prefilling the
         ``swap_in_pages * page_slots`` committed tokens but pays the PCIe
-        transfer of those pages (:meth:`HostTierConfig.page_in_cycles`).
+        transfer of those pages (:meth:`HostTierConfig.page_in_cycles`);
+      * ``spill_in_pages`` of those pages were demoted to the spill tier
+        under host pressure and pay the extra SPILL -> HOST hop
+        (:meth:`SpillTierConfig.page_in_cycles`) on top of the PCIe leg --
+        the *two-hop* restore, priced honestly so a mostly-spilled resume
+        ranks below an all-host one of the same length (and a spilled
+        resume still ranks far above a cold prefill, which is the whole
+        point of the tier).
 
     A cold request scores 0; anything resident scores positive as long as
     a token's prefill outweighs its share of a page transfer (it does by
@@ -341,6 +448,9 @@ def admission_score(shared_tokens: int, swap_in_pages: int, page_slots: int,
     if swap_in_pages:
         saved += swap_in_pages * page_slots * prefill_cycles_per_token
         saved -= swap_in_pages * host.page_in_cycles(clock_ghz)
+    if spill_in_pages:
+        spill = spill if spill is not None else SpillTierConfig()
+        saved -= spill_in_pages * spill.page_in_cycles(clock_ghz)
     return saved
 
 

@@ -18,15 +18,21 @@ package adds the indirection that turns the emulation into a memory *system*:
   * :mod:`repro.emem_vm.block_manager` -- refcounted sequence-level frame
     ownership (logical->frame block tables, prefix sharing, copy-on-write,
     reserved vs on-demand allocation policies) and tiered residency
-    (``FREE -> DEVICE -> HOST -> FREE``: swap-out/swap-in of preempted
-    sequences, bounded LRU retention of completed prompts' prefix pages)
-    for the serving engine.
+    (``FREE -> DEVICE -> HOST -> SPILL -> FREE``: swap-out/swap-in of
+    preempted sequences, host-pressure demotion into the spill tier,
+    bounded LRU retention of completed prompts' prefix pages) for the
+    serving engine;
+  * :mod:`repro.emem_vm.spill`       -- the :class:`SpillStore`, the
+    file/``bytes``-backed third tier the host store demotes into under
+    capacity pressure.
 """
 from repro.emem_vm.allocator import (FrameAllocator, OutOfFrames,  # noqa: F401
-                                     OutOfHostFrames, RES_DEVICE, RES_FREE,
-                                     RES_HOST)
+                                     OutOfHostFrames, OutOfSpillFrames,
+                                     RES_DEVICE, RES_FREE, RES_HOST,
+                                     RES_SPILL)
 from repro.emem_vm.block_manager import (AdmissionCost, BlockManager,  # noqa: F401
                                          CowCopy, PageIO)
+from repro.emem_vm.spill import SpillStore  # noqa: F401
 from repro.emem_vm.cache import CacheSpec, HotPageCache  # noqa: F401
 from repro.emem_vm.page_table import PROT_NONE, PROT_R, PROT_RW, PROT_W  # noqa: F401
 from repro.emem_vm.page_table import PageTable  # noqa: F401

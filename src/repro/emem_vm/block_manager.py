@@ -22,8 +22,8 @@ allocation policies:
     recomputed) and copy-on-write (`CowCopy` records tell the engine which
     device pages to copy on the first divergent write).
 
-**Residency state machine** (``FREE -> DEVICE -> HOST -> FREE``), on-demand
-policy only:
+**Residency state machine** (``FREE -> DEVICE -> HOST -> SPILL -> FREE``),
+on-demand policy only:
 
   * :meth:`evict_seq` moves every frame a sequence holds to the host
     backing store -- the engine's page-IO callback reads the device pages,
@@ -32,9 +32,23 @@ policy only:
     Shared prefix frames are snapshotted too (the copy is taken *before*
     the deref, so eviction is safe whether or not other owners remain).
   * :meth:`restore_seq` is the inverse: fresh device frames are allocated,
-    the host payloads written back through the page-IO callback, and the
+    the parked payloads written back through the page-IO callback, and the
     block table rebuilt.  Preemption + restore therefore trades prefill
     FLOPs for PCIe bytes -- resume is a swap-in, not a recompute.
+  * the **host tier is an actively managed cache**, not a fixed pool: when
+    an eviction finds the host store full, :meth:`_demote_host` moves host
+    pages one tier further down into the :class:`SpillStore`
+    (file/``bytes``-backed) instead of failing the eviction into the
+    recompute cliff.  Demotion priority: snapshots of shared/retained
+    *prefix* pages first (their device copy usually still serves the
+    retention pool, so they are the coldest bytes on host), then the
+    oldest preempted sequences' pages, LRU by preemption order.  A restore
+    of a spilled page is a *two-hop* promotion (``SPILL -> HOST ->
+    DEVICE``): the payload is deserialized into host memory and written on
+    to a device frame, and :class:`AdmissionCost.spill_in_pages` reports
+    the extra hop so the scheduler prices it honestly.  Only when BOTH
+    backing tiers are full does :meth:`evict_seq` return None (the
+    caller's recompute fallback).
   * the **retention pool** keeps completed prompts' prefix pages alive in a
     bounded LRU (:attr:`retain_frames` device frames max) so a system
     prompt survives idle gaps between requests.  Retained frames hold a
@@ -62,7 +76,8 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.emem_vm.allocator import (FrameAllocator, OutOfFrames,  # noqa: F401
-                                     OutOfHostFrames)
+                                     OutOfHostFrames, OutOfSpillFrames)
+from repro.emem_vm.spill import SpillStore
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,13 +95,16 @@ class AdmissionCost:
     #: leading prompt tokens whose prefill would be skipped because their
     #: pages are resident (retention pool or a live sequence's prefix)
     shared_tokens: int
-    #: host pages a swap-resume would move back over PCIe (0 for a fresh
-    #: admission)
+    #: backing-store pages a swap-resume would move back over PCIe (0 for a
+    #: fresh admission; counts every parked page, whichever tier holds it)
     swap_in_pages: int
-    #: a swap record is parked on host for this request
+    #: a swap record is parked on the backing tiers for this request
     has_swap: bool
     #: the need is coverable right now (free frames + drainable retention)
     admissible: bool
+    #: of ``swap_in_pages``, how many sit in the spill tier and pay the
+    #: extra SPILL -> HOST hop on top of the PCIe transfer (two-hop restore)
+    spill_in_pages: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,10 +130,15 @@ class PageIO:
 
 @dataclasses.dataclass
 class _SwapRecord:
-    """A preempted sequence's pages parked on host, keyed by engine tag.
-    (Resume length and the pending token live in the engine's per-request
-    resume record -- this side only owns the page payloads.)"""
-    pages: list          # [(lpage, host_frame), ...] in lpage order
+    """A preempted sequence's pages parked on the backing tiers, keyed by
+    engine tag.  (Resume length and the pending token live in the engine's
+    per-request resume record -- this side only owns the page payloads.)
+    Insertion order of ``BlockManager._swapped`` is preemption order, which
+    the host-pressure demotion policy reads as its LRU."""
+    pages: list          # [(lpage, backing_frame), ...] in lpage order
+    #: leading pages that were snapshots of a shared/retained prefix at
+    #: eviction time -- the demotion policy's first-choice candidates
+    prefix_pages: int = 0
 
 
 @dataclasses.dataclass
@@ -129,7 +152,8 @@ class BlockManager:
     def __init__(self, n_frames: int, n_seqs: int, max_lpages: int,
                  page_slots: int, policy: str = "on_demand",
                  share_prefixes: bool = False, n_host_frames: int | None = None,
-                 retain_frames: int = 0, swap_enabled: bool = True):
+                 retain_frames: int = 0, swap_enabled: bool = True,
+                 n_spill_frames: int = 0, spill_path: str | None = None):
         if policy not in ("reserved", "on_demand"):
             raise ValueError(f"unknown policy {policy!r}")
         if policy == "reserved" and n_frames < n_seqs * max_lpages:
@@ -150,7 +174,15 @@ class BlockManager:
         #: engages while ``share_prefixes`` is on (checked at use time, not
         #: latched -- callers may toggle sharing after construction)
         self.retain_frames = retain_frames if policy == "on_demand" else 0
-        self.allocator = FrameAllocator(n_frames, n_host_frames)
+        #: spill tier: only meaningful where swapping is (on-demand policy);
+        #: n_spill_frames=0 disables it and every PR 3/4 behavior is
+        #: byte-for-byte unchanged (host-full falls back to recompute)
+        if policy != "on_demand":
+            n_spill_frames = 0
+        self.n_spill_frames = n_spill_frames
+        self.spill = SpillStore(spill_path) if n_spill_frames > 0 else None
+        self.allocator = FrameAllocator(n_frames, n_host_frames,
+                                        n_spill_frames)
         self.block_table = np.full((n_seqs, max_lpages), -1, np.int32)
         self.frame_lpage = np.zeros(n_frames, np.int32)
         #: positions < shared_len[seq] are backed by valid shared prefix KV
@@ -173,6 +205,8 @@ class BlockManager:
                          "shared_tokens": 0, "allocs": 0, "frees": 0,
                          "swap_out_pages": 0, "swap_in_pages": 0,
                          "seq_swaps": 0, "seq_restores": 0,
+                         "spill_out_pages": 0, "spill_in_pages": 0,
+                         "host_demotions": 0,
                          "retained_hits": 0, "retained_tokens": 0,
                          "retained_reclaimed": 0,
                          "prefetch_allocs": 0, "prefetch_hits": 0}
@@ -287,20 +321,23 @@ class BlockManager:
         return best, donor
 
     def _admit_need(self, tokens: np.ndarray, tag: int | None):
-        """(frames needed, shared prefix tokens, swap pages, pool entry the
-        admission would share from)."""
+        """(frames needed, shared prefix tokens, swap pages, spill pages,
+        pool entry the admission would share from)."""
         if self.policy == "reserved":
-            return 0, 0, 0, None
+            return 0, 0, 0, 0, None
         if tag is not None and tag in self._swapped:
-            pages = len(self._swapped[tag].pages)
-            return pages, 0, pages, None
+            rec = self._swapped[tag]
+            pages = len(rec.pages)
+            spill = sum(1 for _, f in rec.pages
+                        if self.allocator.is_spill_frame(f))
+            return pages, 0, pages, spill, None
         n = max(len(tokens), 1)
         match, donor = self._match_prefix(np.asarray(tokens))
         pool_key = donor[1] if donor is not None and donor[0] == "pool" \
             else None
         if n <= match:
-            return 0, match, 0, pool_key  # whole prompt shared: re-run only
-        return (self.pages_for(n) - match // self.page_slots, match, 0,
+            return 0, match, 0, 0, pool_key  # whole prompt shared: re-run only
+        return (self.pages_for(n) - match // self.page_slots, match, 0, 0,
                 pool_key)
 
     def admit_frames_needed(self, tokens: np.ndarray,
@@ -317,12 +354,14 @@ class BlockManager:
         skip, and the PCIe pages a swap-resume (identified by ``tag``)
         would move.  Pure query -- no state is touched, so the scheduler
         may score every waiting request each step."""
-        need, match, swap_pages, pool_key = self._admit_need(tokens, tag)
+        need, match, swap_pages, spill_pages, pool_key = \
+            self._admit_need(tokens, tag)
         return AdmissionCost(
             new_frames=need, shared_tokens=int(match),
             swap_in_pages=swap_pages, has_swap=swap_pages > 0,
             admissible=need <= (self.allocator.free_count()
-                                + self._reclaimable(exclude_key=pool_key)))
+                                + self._reclaimable(exclude_key=pool_key)),
+            spill_in_pages=spill_pages)
 
     def can_admit(self, tokens: np.ndarray, tag: int | None = None) -> bool:
         """Admission check: free frames plus what draining the retention
@@ -441,23 +480,68 @@ class BlockManager:
         return True
 
     # -- residency: preemption swap-out / resume swap-in ----------------------
+    def _demote_candidates(self):
+        """Host-resident pages in demotion-priority order: snapshots of
+        shared/retained *prefix* pages first (their device copy usually
+        still serves the retention pool or a live sharer, so these are the
+        coldest bytes on host), then everything else -- both classes LRU by
+        preemption order (``_swapped`` insertion order is the clock).
+        Yields ``(record, page_index, host_frame)``."""
+        for prefix_class in (True, False):
+            for rec in self._swapped.values():
+                for i, (lp, f) in enumerate(rec.pages):
+                    if not self.allocator.is_host_frame(f):
+                        continue            # already spilled
+                    if (i < rec.prefix_pages) == prefix_class:
+                        yield rec, i, f
+
+    def _demote_host(self, want: int) -> int:
+        """HOST -> SPILL: free ``want`` host frames by demoting parked
+        payloads into the spill store.  Returns the number actually freed
+        (< ``want`` iff the spill tier is full or disabled -- the caller
+        then falls back to recompute).  Candidate order is
+        :meth:`_demote_candidates`; record page lists are rewritten in
+        place so a later restore transparently promotes from whichever
+        tier holds each page."""
+        if self.spill is None:
+            return 0
+        freed = 0
+        for rec, i, hf in list(self._demote_candidates()):
+            if freed >= want:
+                break
+            try:
+                sf = self.allocator.alloc_spill()
+            except OutOfSpillFrames:
+                break
+            self.spill.put(sf, self._host_payloads.pop(hf))
+            self.allocator.free_host(hf)
+            rec.pages[i] = (rec.pages[i][0], sf)
+            freed += 1
+            self.counters["spill_out_pages"] += 1
+        if freed:
+            self.counters["host_demotions"] += 1
+        return freed
+
     def evict_seq(self, seq: int, tag: int) -> int | None:
         """DEVICE -> HOST: park every frame ``seq`` holds in the host
         backing store under ``tag`` and release the device frames.
 
         Returns the number of pages swapped out, or None when swapping is
         unavailable (reserved policy, swapping disabled, no page-IO bound,
-        or the host store cannot hold the pages) -- the caller falls back to
-        the recompute-preemption path.  Shared prefix frames are snapshotted
-        before the deref, so the record is self-contained even if every
-        other owner disappears before the restore."""
+        or BOTH backing tiers are full -- host pressure first demotes host
+        pages to the spill store, so recompute is genuinely the last
+        resort).  Shared prefix frames are snapshotted before the deref, so
+        the record is self-contained even if every other owner disappears
+        before the restore."""
         if (self.policy == "reserved" or not self.swap_enabled
                 or self.page_io is None or tag in self._swapped):
             return None
         row = self.block_table[seq]
         lpages = [lp for lp in range(self.max_lpages) if row[lp] >= 0]
-        if len(lpages) > self.allocator.host_free_count():
-            return None                     # host store full: recompute
+        short = len(lpages) - self.allocator.host_free_count()
+        if short > 0 and self._demote_host(short) < short:
+            return None                     # both tiers full: recompute
+        shared = int(self.shared_len[seq])
         frames = [int(row[lp]) for lp in lpages]
         payloads = self.page_io.read(frames)
         pages = []
@@ -468,7 +552,10 @@ class BlockManager:
             self.allocator.unpin(f)
             self.allocator.deref(f)
             self.counters["frees"] += 1
-        self._swapped[tag] = _SwapRecord(pages=pages)
+        self._swapped[tag] = _SwapRecord(
+            pages=pages,
+            prefix_pages=sum(1 for lp, _ in pages
+                             if lp * self.page_slots < shared))
         self._prompts.pop(seq, None)
         self._prefetched = {(s, lp) for s, lp in self._prefetched if s != seq}
         self.block_table[seq] = -1
@@ -481,13 +568,28 @@ class BlockManager:
     def has_swap(self, tag: int | None) -> bool:
         return tag is not None and tag in self._swapped
 
+    def _unpark_payload(self, bf: int):
+        """Release backing frame ``bf`` and return its payload, whichever
+        tier holds it.  A spill frame is the two-hop promotion's first leg:
+        the bytes are deserialized into host memory (SPILL -> HOST) before
+        the caller's page-IO write moves them on to the device."""
+        if self.allocator.is_spill_frame(bf):
+            payload = self.spill.pop(bf)
+            self.allocator.free_spill(bf)
+            self.counters["spill_in_pages"] += 1
+            return payload
+        payload = self._host_payloads.pop(bf)
+        self.allocator.free_host(bf)
+        return payload
+
     def restore_seq(self, seq: int, tag: int, tokens=None) -> int:
-        """HOST -> DEVICE: rebuild ``seq``'s block table from the swap
-        record ``tag``, writing the parked payloads back into fresh device
-        frames through the page-IO callback.  Raises :class:`OutOfFrames`
-        (after reclaiming the retention pool) if the device pool cannot hold
-        the pages; the record is left intact in that case.  Returns the
-        number of pages swapped back in."""
+        """HOST (or SPILL -> HOST) -> DEVICE: rebuild ``seq``'s block table
+        from the swap record ``tag``, writing the parked payloads back into
+        fresh device frames through the page-IO callback.  Spilled pages
+        take the two-hop promotion transparently.  Raises
+        :class:`OutOfFrames` (after reclaiming the retention pool) if the
+        device pool cannot hold the pages; the record is left intact in
+        that case.  Returns the number of pages swapped back in."""
         rec = self._swapped[tag]
         need = len(rec.pages)
         if need > self.allocator.free_count():
@@ -498,13 +600,12 @@ class BlockManager:
                 f"free")
         assert (self.block_table[seq] < 0).all(), f"seq {seq} already mapped"
         assignments = []
-        for lp, hf in rec.pages:
+        for lp, bf in rec.pages:
             f = self._alloc_frame()
             self.allocator.pin(f)
             self.block_table[seq, lp] = f
             self.frame_lpage[f] = lp
-            assignments.append((f, self._host_payloads.pop(hf)))
-            self.allocator.free_host(hf)
+            assignments.append((f, self._unpark_payload(bf)))
         self.page_io.write(assignments)
         del self._swapped[tag]
         self.shared_len[seq] = 0            # every restored frame is private
@@ -517,13 +618,17 @@ class BlockManager:
 
     def drop_swap(self, tag: int) -> None:
         """Discard a swap record (request cancelled / completed elsewhere):
-        host frames return to the pool, payloads are dropped."""
+        backing frames return to their tier's pool, payloads are dropped."""
         rec = self._swapped.pop(tag, None)
         if rec is None:
             return
-        for _, hf in rec.pages:
-            self._host_payloads.pop(hf, None)
-            self.allocator.free_host(hf)
+        for _, bf in rec.pages:
+            if self.allocator.is_spill_frame(bf):
+                self.spill.drop(bf)
+                self.allocator.free_spill(bf)
+            else:
+                self._host_payloads.pop(bf, None)
+                self.allocator.free_host(bf)
 
     # -- completion / retention ------------------------------------------------
     def release_seq(self, seq: int, completed: bool = False) -> None:
@@ -625,13 +730,25 @@ class BlockManager:
                 "retained_entries": len(self._retained),
                 "retained_frames": sum(len(e.pages)
                                        for e in self._retained.values()),
-                "swapped_seqs": len(self._swapped)}
+                "swapped_seqs": len(self._swapped),
+                **(self.spill.stats() if self.spill is not None else {})}
+
+    def leak_counts(self) -> dict:
+        """Frames still allocated per tier -- the leak report.  Only
+        meaningful after :meth:`shutdown` drained the passive owners."""
+        return {"device": self.allocator.used_count(),
+                "host": self.allocator.host_used_count(),
+                "spill": self.allocator.spill_used_count()}
 
     def shutdown(self) -> int:
         """Release the reserved-policy reservation, drain the retention pool
-        and any unclaimed swap records, and report the number of device
-        frames still referenced (the leak count -- 0 iff every sequence was
-        released)."""
+        and any unclaimed swap records, and report the number of frames
+        still referenced across ALL tiers (the leak count -- 0 iff every
+        sequence was released).  A host- or spill-store leak fails shutdown
+        exactly like a device leak: a parked payload nobody can ever
+        restore is capacity lost for the process lifetime, which on the
+        backing tiers is silent (no allocation ever fails loudly there
+        until the store fills)."""
         if self.policy == "reserved":
             for s in range(self.n_seqs):
                 for lp in range(self.max_lpages):
@@ -642,4 +759,6 @@ class BlockManager:
         self.drain_retained()
         for tag in list(self._swapped):
             self.drop_swap(tag)
-        return self.allocator.used_count()
+        if self.spill is not None:
+            self.spill.drain()              # payloads whose frame id leaked
+        return sum(self.leak_counts().values())

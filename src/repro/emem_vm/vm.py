@@ -42,6 +42,7 @@ from repro.core import emem
 from repro.emem_vm import page_table as pt_mod
 from repro.emem_vm.allocator import FrameAllocator
 from repro.emem_vm.cache import CacheSpec, HotPageCache
+from repro.emem_vm.spill import SpillStore
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,11 +55,22 @@ class VMConfig:
     #: Sized so no request is ever dropped by the EMem capacity queues
     #: (capacity == requests-per-shard when factor >= n_shards).
     capacity_factor: float | None = None
+    #: host backing-store capacity in pages (None = unbounded, the
+    #: pre-spill behavior).  When bounded, a swap-out that finds the host
+    #: store full demotes its LRU host page into the spill tier
+    #: (HOST -> SPILL) instead of growing without limit; a fault on a
+    #: spilled page promotes two-hop (SPILL -> HOST -> DEVICE).
+    n_host_pages: int | None = None
+    #: directory backing the spill store (None: in-memory bytes)
+    spill_path: str | None = None
 
     def __post_init__(self):
         if self.spec.n_pages < 2:
             raise ValueError("need >= 2 physical frames (one is the trash "
                              "frame)")
+        if self.n_host_pages is not None and self.n_host_pages < 0:
+            raise ValueError("n_host_pages must be >= 0 (or None for an "
+                             "unbounded host store)")
 
     @property
     def trash_frame(self) -> int:
@@ -205,11 +217,17 @@ class EMemVM:
         cspec = cfg.cache_spec()
         self.cache = HotPageCache.create(cspec) if cspec else None
         #: host backing store for swapped-out pages: vpage -> [ps, width] np
+        #: (insertion order == swap-out order, the host tier's demotion LRU)
         self._host_pages: dict[int, np.ndarray] = {}
+        #: third tier: serialized bytes the bounded host store demotes into
+        #: (None with an unbounded host store -- the pre-spill behavior)
+        self._spill = (SpillStore(cfg.spill_path)
+                       if cfg.n_host_pages is not None else None)
         #: LRU bookkeeping for fault-time victim selection
         self._use_tick: dict[int, int] = {}
         self._tick = 0
-        self.swap_counters = {"swap_outs": 0, "swap_ins": 0, "faults": 0}
+        self.swap_counters = {"swap_outs": 0, "swap_ins": 0, "faults": 0,
+                              "spill_outs": 0, "spill_ins": 0}
 
     # -- mapping (control plane) ---------------------------------------------
     def map_page(self, vpage: int, prot: int = pt_mod.PROT_RW) -> int:
@@ -225,6 +243,8 @@ class EMemVM:
         if self.page_table.is_swapped(vpage):
             self.page_table.unmap(vpage)          # no device frame to free
             self._host_pages.pop(vpage, None)
+            if self._spill is not None:
+                self._spill.drop(vpage)
             self._use_tick.pop(vpage, None)
             return
         frame = self.page_table.frame_of(vpage)
@@ -239,14 +259,25 @@ class EMemVM:
     def protect(self, vpage: int, prot: int) -> None:
         self.page_table.protect(vpage, prot)
 
-    # -- residency (DEVICE <-> HOST swap) --------------------------------------
+    # -- residency (DEVICE <-> HOST <-> SPILL swap) ----------------------------
+    def _demote_host_lru(self) -> None:
+        """HOST -> SPILL: serialize the oldest-swapped-out host page into
+        the spill store, keeping the bounded host store within capacity."""
+        vp, page = next(iter(self._host_pages.items()))
+        self._spill.put(vp, page)
+        del self._host_pages[vp]
+        self.swap_counters["spill_outs"] += 1
+
     def swap_out(self, vpage: int) -> None:
         """Evict a device-resident page to the host store (DEVICE -> HOST).
 
         The dirty cache line (if any) is written back first, then the page's
         slots are read out of the emulated memory into a host numpy copy and
-        the device frame returns to the free list.  The page stays mapped
-        but invalid -- a later access faults it back in transparently."""
+        the device frame returns to the free list.  With a bounded host
+        store (``cfg.n_host_pages``) the eviction that overflows it demotes
+        the LRU host page on down into the spill tier instead of growing
+        without limit.  The page stays mapped but invalid -- a later access
+        faults it back in transparently."""
         frame = self.page_table.frame_of(vpage)    # raises if not resident
         self._writeback_frame(frame)
         if self.cache is not None:
@@ -257,25 +288,41 @@ class EMemVM:
         page = np.asarray(_mem_read(self.cfg, self.mesh, self.axes,
                                     self.data, addrs))
         self._host_pages[vpage] = page
+        if self._spill is not None:
+            while len(self._host_pages) > self.cfg.n_host_pages:
+                self._demote_host_lru()
         self.page_table.mark_swapped(vpage)
         self.allocator.free(frame)
         self._use_tick.pop(vpage, None)
         self.swap_counters["swap_outs"] += 1
 
     def swap_in(self, vpage: int) -> int:
-        """Fault a swapped-out page back into a device frame (HOST ->
-        DEVICE); returns the frame.  Raises :class:`OutOfFrames` when the
-        pool is full -- callers that can tolerate eviction should go through
-        the ``vread``/``vwrite`` fault path, which picks an LRU victim."""
+        """Fault a swapped-out page back into a device frame; returns the
+        frame.  A host-resident page is the one-hop HOST -> DEVICE path; a
+        spilled page promotes two-hop (SPILL -> HOST -> DEVICE: the bytes
+        deserialize into host memory, then write on to the device frame).
+        Raises :class:`OutOfFrames` when the pool is full -- callers that
+        can tolerate eviction should go through the ``vread``/``vwrite``
+        fault path, which picks an LRU victim."""
         if not self.page_table.is_swapped(vpage):
             raise ValueError(f"vpage {vpage} not swapped out")
-        frame = self.allocator.alloc()
+        frame = self.allocator.alloc()     # before any payload I/O: an
+        # OutOfFrames retry (after LRU victim eviction) must not have paid
+        # a wasted spill read, and the backing tiers stay untouched
+        if vpage in self._host_pages:
+            page, from_spill = self._host_pages[vpage], False
+        else:                              # SPILL -> HOST first leg
+            page, from_spill = self._spill.get(vpage), True
         ps = self.cfg.spec.page_slots
         addrs = frame * ps + jnp.arange(ps, dtype=jnp.int32)
         self.data = _mem_write(self.cfg, self.mesh, self.axes, self.data,
-                               addrs, jnp.asarray(self._host_pages[vpage]))
+                               addrs, jnp.asarray(page))
         self.page_table.restore(vpage, frame)
-        del self._host_pages[vpage]
+        if from_spill:
+            self._spill.drop(vpage)
+            self.swap_counters["spill_ins"] += 1
+        else:
+            del self._host_pages[vpage]
         self.swap_counters["swap_ins"] += 1
         return frame
 
@@ -286,9 +333,10 @@ class EMemVM:
 
         Free when nothing is swapped out: the swap-free data path (every
         pre-residency caller) must not pay host-side per-access bookkeeping
-        -- the recency ticks only matter once there is a host page a fault
-        could evict for."""
-        if not self._host_pages:
+        -- the recency ticks only matter once there is a backing-tier page
+        a fault could evict for."""
+        if not self._host_pages and \
+                (self._spill is None or len(self._spill) == 0):
             return
         ps = self.cfg.spec.page_slots
         vpages = np.unique(np.asarray(addrs, np.int64) // ps)
@@ -389,4 +437,7 @@ class EMemVM:
     def stats(self) -> dict:
         return {**self.allocator.stats(), **self.counters(),
                 "mapped_pages": self.page_table.mapped_count(),
-                "swapped_pages": self.page_table.swapped_count()}
+                "swapped_pages": self.page_table.swapped_count(),
+                "host_pages": len(self._host_pages),
+                "spilled_pages": (len(self._spill)
+                                  if self._spill is not None else 0)}

@@ -29,6 +29,23 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--paged", action="store_true",
                     help="use the emulated-memory paged KV layout")
+    ap.add_argument("--preempt-mode", choices=("swap", "recompute"),
+                    default="swap",
+                    help="how preempted sequences resume: swap-in of "
+                         "host-parked pages, or requeue-and-re-prefill")
+    ap.add_argument("--retain-frames", type=int, default=0,
+                    help="device frames the retention pool may keep holding "
+                         "completed prompts' prefix pages (0 disables)")
+    ap.add_argument("--host-frames", type=int, default=None,
+                    help="host backing-store frames for swapped-out pages "
+                         "(default: one per device frame)")
+    ap.add_argument("--spill-frames", type=int, default=0,
+                    help="third-tier spill-store frames the host tier "
+                         "demotes into under pressure (0 disables the "
+                         "spill tier)")
+    ap.add_argument("--spill-path", type=str, default=None,
+                    help="directory backing the spill store (default: "
+                         "in-memory bytes)")
     ap.add_argument("--sched-window", type=int,
                     default=SchedulerConfig.window,
                     help="residency-aware admission reorder window "
@@ -55,7 +72,10 @@ def main() -> None:
             for i in range(args.requests)]
 
     engine = ServeEngine(model, params, EngineConfig(
-        slots=args.slots, max_len=args.max_len))
+        slots=args.slots, max_len=args.max_len,
+        preempt_mode=args.preempt_mode, retain_frames=args.retain_frames,
+        host_frames=args.host_frames, spill_frames=args.spill_frames,
+        spill_path=args.spill_path))
     sched = Scheduler(engine, SchedulerConfig(window=args.sched_window,
                                               aging_steps=args.aging_steps))
     sched.submit(reqs)

@@ -31,11 +31,16 @@ just allocation policies:
         the youngest sequence is preempted -- its frames move to the HOST
         tier (``BlockManager.evict_seq``) and the request is requeued.
         Re-admission is a *swap-in* (``restore_seq``), not a re-prefill:
-        the engine trades prefill FLOPs for PCIe bytes.  When swapping is
-        unavailable (``preempt_mode="recompute"``, or the host store is
-        full) the PR 2 recompute path still applies: the request requeues
-        with its generated tokens as a prompt extension and deterministic
-        greedy decode makes the re-run token-identical.
+        the engine trades prefill FLOPs for PCIe bytes.  With
+        ``spill_frames > 0`` the host tier is itself actively managed: on
+        host-store pressure the BlockManager demotes host pages one tier
+        further down into the file/bytes-backed spill store, and a restore
+        promotes them back (``SPILL -> HOST -> DEVICE``).  Recompute is the
+        *last* resort only: when swapping is off
+        (``preempt_mode="recompute"``) or BOTH backing tiers are full, the
+        PR 2 path still applies -- the request requeues with its generated
+        tokens as a prompt extension and deterministic greedy decode makes
+        the re-run token-identical.
       - **prefix retention**: with ``retain_frames > 0`` completed prompts'
         prefix pages stay alive in the BlockManager's bounded LRU pool, so
         a system prompt survives idle gaps between requests.
@@ -86,6 +91,12 @@ class EngineConfig:
     retain_frames: int = 0
     #: host backing-store frames (None: one per device frame)
     host_frames: int | None = None
+    #: third-tier spill-store frames the host tier demotes into under
+    #: capacity pressure (0 disables the spill tier: host-full falls back
+    #: to recompute exactly as before)
+    spill_frames: int = 0
+    #: directory backing the spill store (None: in-memory bytes)
+    spill_path: str | None = None
 
 
 class ServeEngine:
@@ -152,7 +163,9 @@ class ServeEngine:
                 policy=policy, share_prefixes=attn_only,
                 n_host_frames=ecfg.host_frames,
                 retain_frames=ecfg.retain_frames,
-                swap_enabled=ecfg.preempt_mode == "swap")
+                swap_enabled=ecfg.preempt_mode == "swap",
+                n_spill_frames=ecfg.spill_frames,
+                spill_path=ecfg.spill_path)
             from repro.parallel.paged_attention import (read_frame_pages,
                                                         write_frame_pages)
             self.blocks.page_io = PageIO(
@@ -332,14 +345,16 @@ class ServeEngine:
         return self.blocks.stats()
 
     def shutdown(self, abort: bool = False) -> dict:
-        """Leak detector: at shutdown every frame reference must have been
-        released (the BlockManager drains its retention pool and unclaimed
-        swap records first -- a drained pool counts as zero).  Idempotent:
-        a second call returns the recorded stats.  ``abort=True`` releases
-        still-active requests instead of refusing (the context-manager exit
-        path when the body raised).  Returns the engine counters
-        (dispatch_stats-style); raises if any sequence is still active or
-        any frame leaked."""
+        """Leak detector: at shutdown every frame reference -- device, host
+        AND spill tier -- must have been released (the BlockManager drains
+        its retention pool and unclaimed swap records first; a drained pool
+        counts as zero).  A host- or spill-store leak fails shutdown
+        exactly like a device leak: parked payloads nobody can restore are
+        silently lost capacity.  Idempotent: a second call returns the
+        recorded stats.  ``abort=True`` releases still-active requests
+        instead of refusing (the context-manager exit path when the body
+        raised).  Returns the engine counters (dispatch_stats-style);
+        raises if any sequence is still active or any frame leaked."""
         if self._shutdown_stats is not None:
             return self._shutdown_stats
         active = [r.uid for r in self.slot_req if r is not None]
@@ -353,8 +368,11 @@ class ServeEngine:
             if self.blocks is not None:
                 self.blocks.release_seq(i, completed=False)
         leaked = self.blocks.shutdown() if self.blocks is not None else 0
+        tiers = (self.blocks.leak_counts() if self.blocks is not None
+                 else {"device": 0, "host": 0, "spill": 0})
         self.counters["leaked_frames"] = leaked
         stats = dict(self.counters)
+        stats.update({f"leaked_{t}_frames": n for t, n in tiers.items()})
         if self.blocks is not None:
             stats.update(self.blocks.counters)
             stats["shared_prompt_tokens"] = \
@@ -362,7 +380,7 @@ class ServeEngine:
         if leaked:
             raise RuntimeError(
                 f"KV frame leak at shutdown: {leaked} frames still "
-                f"referenced ({stats})")
+                f"referenced ({tiers}; {stats})")
         self._shutdown_stats = stats
         return stats
 

@@ -46,6 +46,10 @@ score is 0.0 and ties resolve in queue order -- byte-for-byte FIFO.
     queue position it would have held under FIFO.
   * ``host`` -- the :class:`repro.core.emulation.HostTierConfig` pricing
     swap-in PCIe bytes in the score.
+  * ``spill`` -- the :class:`repro.core.emulation.SpillTierConfig` pricing
+    the extra SPILL -> HOST hop of pages the host tier demoted under
+    pressure (``AdmissionCost.spill_in_pages``), so a two-hop restore is
+    ranked honestly against an all-host one.
   * ``prefill_cycles_per_token`` -- the §7-model FLOPs proxy for one
     token's prefill; only its ratio to the PCIe page cost matters.
 """
@@ -56,7 +60,7 @@ import dataclasses
 from typing import Iterable
 
 from repro.core.emulation import (PREFILL_CYCLES_PER_TOKEN, HostTierConfig,
-                                  admission_score)
+                                  SpillTierConfig, admission_score)
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -66,6 +70,7 @@ class SchedulerConfig:
     window: int = 8
     aging_steps: int = 64
     host: HostTierConfig = HostTierConfig()
+    spill: SpillTierConfig = SpillTierConfig()
     prefill_cycles_per_token: float = PREFILL_CYCLES_PER_TOKEN
 
 
@@ -100,7 +105,8 @@ class Scheduler:
         return self.engine.can_admit(req, cost), admission_score(
             cost.shared_tokens, cost.swap_in_pages, self.engine.page_slots,
             host=self.cfg.host,
-            prefill_cycles_per_token=self.cfg.prefill_cycles_per_token)
+            prefill_cycles_per_token=self.cfg.prefill_cycles_per_token,
+            spill_in_pages=cost.spill_in_pages, spill=self.cfg.spill)
 
     def _pick_next(self, tried: set[int]) -> int | None:
         """Queue index of the next request to admit, or None to admit

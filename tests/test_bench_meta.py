@@ -59,6 +59,22 @@ def test_smoke_merge_keeps_full_run_sections(bench_path):
     assert out["history"][0]["meta"]["git_rev"] == "aaaa"
 
 
+def test_gate_fails_when_headline_metric_missing_from_run(bench_path):
+    """Satellite regression: a workload that silently stops emitting its
+    headline metric used to PASS the gate (both-sides-present was required
+    to compare).  A baseline metric absent from the current run must now
+    fail loudly; a baseline predating a workload is still tolerated."""
+    bench_path.write_text(json.dumps(_rec(prefix=2.0, swap=1.6, sched=1.9)))
+    cur = _rec(prefix=2.0, swap=1.6, sched=1.9)
+    del cur["swap"]                      # the workload silently vanished
+    fails = vm_bench.check_gate(cur)
+    assert len(fails) == 1 and "swap" in fails[0]
+    assert "no value" in fails[0]
+    # baseline missing the metric (older baseline): still skipped
+    bench_path.write_text(json.dumps({"swap": {"decode_step_ratio": 1.6}}))
+    assert vm_bench.check_gate(_rec(prefix=9.9, swap=1.6, sched=9.9)) == []
+
+
 def test_gate_fails_on_regression_only(bench_path):
     bench_path.write_text(json.dumps(_rec(prefix=2.0, swap=1.6, sched=1.9)))
     # within 15%: no failure

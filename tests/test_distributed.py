@@ -402,6 +402,109 @@ def test_serve_swap_and_cow_token_identity_on_mesh():
 
 
 @pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_serve_spill_tier_token_identity_on_meshes(n_devices):
+    """Tentpole acceptance on 1/2/4-device meshes: with the host store
+    sized to force HOST -> SPILL demotion, spill-resume (incl. two-hop
+    promotions) is token-identical per uid to both the recompute baseline
+    and a roomy run, and strictly cheaper in decode steps than
+    recompute."""
+    out = run_with_devices(f"""
+        import dataclasses
+        from repro.models import Model, ModelConfig
+        from repro.parallel import mesh_ctx
+        from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+        n_dev = {n_devices}
+        base = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                           n_heads=8, n_kv_heads=2, head_dim=16, d_ff=128,
+                           vocab_size=128, kv_layout="pooled",
+                           kv_page_slots=4, param_dtype="float32",
+                           compute_dtype="float32")
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, 128,
+                                int(rng.integers(3, 8))).astype(np.int32)
+                   for _ in range(6)]
+        def run(pool, mode, host=None, spill=0):
+            cfg = dataclasses.replace(base, kv_pool_pages=pool)
+            mesh = make_mesh((n_dev, 1), ("data", "model"))
+            mesh_ctx.set_context(mesh, batch_axes=("data",),
+                                 tp_axis="model", kv_axes=("data",))
+            model = Model(cfg); params = model.init(jax.random.key(0))
+            with ServeEngine(model, params,
+                             EngineConfig(slots=6, max_len=32,
+                                          preempt_mode=mode,
+                                          host_frames=host,
+                                          spill_frames=spill)) as e:
+                e.blocks.share_prefixes = False
+                s = Scheduler(e)
+                s.submit([Request(uid=i, prompt=p, max_new_tokens=6)
+                          for i, p in enumerate(prompts)])
+                done = s.run()
+            mesh_ctx.clear_context()
+            return {{r.uid: tuple(r.output) for r in done}}, e.shutdown()
+        spilled, st_sp = run(12, "swap", host=2, spill=32)
+        rec, st_rec = run(12, "recompute")
+        roomy, _ = run(64, "swap")
+        assert spilled == rec == roomy, (spilled, rec, roomy)
+        assert st_sp["host_demotions"] > 0 and st_sp["spill_out_pages"] > 0
+        assert st_sp["spill_in_pages"] > 0, "no two-hop promotion"
+        assert st_sp["decode_steps"] < st_rec["decode_steps"], \\
+            (st_sp["decode_steps"], st_rec["decode_steps"])
+        assert st_sp["leaked_frames"] == 0
+        print("MESH_SPILL_OK", n_dev, st_sp["spill_out_pages"],
+              st_sp["decode_steps"], st_rec["decode_steps"])
+    """, n_devices=max(n_devices, 2))
+    assert "MESH_SPILL_OK" in out
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_serve_host_full_recompute_fallback_on_meshes(n_devices):
+    """Satellite acceptance on 1/2/4-device meshes: preempt_mode="swap"
+    with a host store deliberately too small and the spill tier DISABLED
+    takes the recompute fallback, token-identically to a roomy run (the
+    demotion path must not regress the PR 3 fallback when spill is off)."""
+    out = run_with_devices(f"""
+        import dataclasses
+        from repro.models import Model, ModelConfig
+        from repro.parallel import mesh_ctx
+        from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+        n_dev = {n_devices}
+        base = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                           n_heads=8, n_kv_heads=2, head_dim=16, d_ff=128,
+                           vocab_size=128, kv_layout="pooled",
+                           kv_page_slots=4, param_dtype="float32",
+                           compute_dtype="float32")
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, 128,
+                                int(rng.integers(3, 8))).astype(np.int32)
+                   for _ in range(6)]
+        def run(pool, host):
+            cfg = dataclasses.replace(base, kv_pool_pages=pool)
+            mesh = make_mesh((n_dev, 1), ("data", "model"))
+            mesh_ctx.set_context(mesh, batch_axes=("data",),
+                                 tp_axis="model", kv_axes=("data",))
+            model = Model(cfg); params = model.init(jax.random.key(0))
+            with ServeEngine(model, params,
+                             EngineConfig(slots=6, max_len=32,
+                                          preempt_mode="swap",
+                                          host_frames=host)) as e:
+                e.blocks.share_prefixes = False
+                s = Scheduler(e)
+                s.submit([Request(uid=i, prompt=p, max_new_tokens=6)
+                          for i, p in enumerate(prompts)])
+                done = s.run()
+            mesh_ctx.clear_context()
+            return {{r.uid: tuple(r.output) for r in done}}, e.shutdown()
+        tight, st = run(12, 1)
+        roomy, _ = run(64, None)
+        assert tight == roomy, (tight, roomy)
+        assert st["preempted"] > 0 and st["swapped"] == 0
+        assert st["spill_out_pages"] == 0 and st["leaked_frames"] == 0
+        print("MESH_HOST_FULL_OK", n_dev, st["preempted"])
+    """, n_devices=max(n_devices, 2))
+    assert "MESH_HOST_FULL_OK" in out
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
 def test_serve_token_identity_both_policies_on_meshes(n_devices):
     """The serving determinism test, parametrized over both BlockManager
     policies (kv_layout paged=reserved / pooled=on-demand) on 1/2/4-device

@@ -23,11 +23,11 @@ from repro.emem_vm.cache import CacheSpec, HotPageCache
 
 
 def make_vm(cache_sets=0, n_requesters=1, n_shards=1, page_slots=16,
-            n_slots=1024, width=4):
+            n_slots=1024, width=4, **cfg_kw):
     spec = emem.EMemSpec(n_slots=n_slots, width=width, page_slots=page_slots,
                          n_shards=n_shards)
     cfg = VMConfig(spec=spec, n_vpages=spec.n_pages * 2, cache_sets=cache_sets,
-                   n_requesters=n_requesters)
+                   n_requesters=n_requesters, **cfg_kw)
     return EMemVM(cfg)
 
 
@@ -414,6 +414,85 @@ def test_allocator_pins_and_eviction_candidates():
     assert a.stats()["evictable"] == 0
 
 
+# -- allocator spill tier / tier-confusion validation --------------------------
+def test_allocator_spill_lifecycle():
+    from repro.emem_vm import (OutOfSpillFrames, RES_FREE, RES_SPILL)
+    a = FrameAllocator(4, n_host_frames=2, n_spill_frames=3)
+    s = a.alloc_spill()
+    assert s >= 6 and a.is_spill_frame(s) and a.residency(s) == RES_SPILL
+    assert a.tier_of(s) == "spill"
+    assert a.spill_used_count() == 1 and a.spill_free_count() == 2
+    a.free_spill(s)
+    assert a.residency(s) == RES_FREE and a.spill_free_count() == 3
+    # spill exhaustion is its own error (other pools untouched)
+    a.alloc_spill(); a.alloc_spill(); a.alloc_spill()
+    with pytest.raises(OutOfSpillFrames):
+        a.alloc_spill()
+    assert a.free_count() == 4 and a.host_free_count() == 2
+    # spill frames are never pinned (they back bytes, not live decodes)
+    s2 = a.n_frames + a.n_host_frames     # a live spill id
+    with pytest.raises(ValueError, match="cannot be pinned"):
+        a.pin(s2)
+    assert a.stats()["spill_frames"] == 3 and a.stats()["spill_used"] == 3
+
+
+def test_allocator_tier_confusion_rejected():
+    """Satellite regression: ``free_host`` was a bare alias of ``free``, so
+    a device id passed to ``free_host`` (or a host id to ``free``) was
+    silently accepted and returned to the WRONG free list -- the same
+    physical frame would then be handed out in two tiers at once.  Every
+    free path now validates its id space."""
+    a = FrameAllocator(4, n_host_frames=2, n_spill_frames=2)
+    d, h, s = a.alloc(), a.alloc_host(), a.alloc_spill()
+    with pytest.raises(ValueError, match="tier"):
+        a.free_host(d)                    # device id down the host path
+    with pytest.raises(ValueError, match="tier"):
+        a.free(h)                         # host id down the device path
+    with pytest.raises(ValueError, match="tier"):
+        a.free_spill(h)
+    with pytest.raises(ValueError, match="tier"):
+        a.free(s)
+    # the rejections left every refcount and free list intact
+    assert a.refcount(d) == 1 and a.refcount(h) == 1 and a.refcount(s) == 1
+    a.free(d); a.free_host(h); a.free_spill(s)
+    assert (a.free_count(), a.host_free_count(), a.spill_free_count()) \
+        == (4, 2, 2)
+
+
+# -- spill store ---------------------------------------------------------------
+def test_spill_store_bytes_roundtrip():
+    from repro.emem_vm import SpillStore
+    st = SpillStore()
+    payload = {"layer0": (np.arange(6.0), np.ones(3))}
+    n = st.put(7, payload)
+    assert n > 0 and 7 in st and len(st) == 1 and st.bytes_used() == n
+    with pytest.raises(ValueError, match="already holds"):
+        st.put(7, payload)                # one owner per spill frame
+    got = st.get(7)
+    np.testing.assert_array_equal(got["layer0"][0], payload["layer0"][0])
+    popped = st.pop(7)                    # the promotion path drops the bytes
+    np.testing.assert_array_equal(popped["layer0"][1], payload["layer0"][1])
+    assert 7 not in st and st.bytes_used() == 0
+    with pytest.raises(KeyError):
+        st.get(7)
+    assert st.counters["writes"] == 1 and st.counters["reads"] == 2
+
+
+def test_spill_store_file_backed(tmp_path):
+    import os
+
+    from repro.emem_vm import SpillStore
+    st = SpillStore(path=str(tmp_path / "spill"))
+    st.put(3, ("page", np.arange(4)))
+    assert os.path.exists(tmp_path / "spill" / "frame_3.bin")
+    got = st.get(3)
+    assert got[0] == "page"
+    np.testing.assert_array_equal(got[1], np.arange(4))
+    assert st.stats()["backing"] == "file"
+    assert st.drain() == 1                # shutdown drops the files too
+    assert not os.path.exists(tmp_path / "spill" / "frame_3.bin")
+
+
 # -- page table swapped bit ----------------------------------------------------
 def test_page_table_swapped_bit_semantics():
     from repro.emem_vm import page_table as pt_mod
@@ -502,6 +581,63 @@ def test_vm_fault_evicts_lru_when_pool_full():
     np.testing.assert_allclose(out[0], vals[0], rtol=1e-6)
     assert vm.page_table.swapped_count() == 1       # the victim moved to host
     assert vm.counters()["swap_outs"] == 2
+
+
+def test_vm_bounded_host_store_spills_through_and_faults_back():
+    """The EMemVM fault path on the third tier: a bounded host store
+    (``n_host_pages``) demotes its LRU page into the spill store when a
+    swap-out overflows it, and an access to a spilled page faults back
+    two-hop (SPILL -> HOST -> DEVICE) with the original bytes -- all
+    transparently to the data plane."""
+    vm = make_vm(n_host_pages=2)
+    rng = np.random.default_rng(17)
+    vm.map_range(0, 6)
+    ps, w = vm.cfg.spec.page_slots, vm.cfg.spec.width
+    addrs = jnp.asarray(np.arange(6) * ps, jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(6, w)).astype(np.float32))
+    vm.vwrite(addrs, vals)
+    for vp in (0, 1, 2, 3):                # 4 swap-outs into a 2-page store
+        vm.swap_out(vp)
+    st = vm.stats()
+    assert st["host_pages"] == 2 and st["spilled_pages"] == 2
+    assert vm.counters()["spill_outs"] == 2   # pages 0,1 demoted LRU-first
+    # the access faults all four back in -- two of them two-hop
+    out = np.asarray(vm.vread(addrs))
+    np.testing.assert_allclose(out, np.asarray(vals), rtol=1e-6)
+    assert vm.counters()["spill_ins"] == 2
+    assert vm.stats()["spilled_pages"] == 0
+    # unbounded host store (the default): no spill machinery engages
+    vm2 = make_vm()
+    vm2.map_range(0, 2)
+    vm2.vwrite(jnp.asarray([0], jnp.int32), vals[:1])
+    vm2.swap_out(0)
+    assert vm2.counters()["spill_outs"] == 0
+    assert vm2.stats()["spilled_pages"] == 0
+
+
+def test_vm_spilled_fault_survives_full_pool():
+    """Regression: faulting a SPILLED page into a full device pool must
+    stage the bytes on host before taking a frame -- the OutOfFrames retry
+    (after LRU victim eviction) must not lose the page."""
+    vm = make_vm(n_host_pages=1)
+    usable = vm.allocator.n_frames
+    vm.map_range(0, usable)                # pool completely full
+    ps, w = vm.cfg.spec.page_slots, vm.cfg.spec.width
+    rng = np.random.default_rng(21)
+    vals = rng.normal(size=(usable, w)).astype(np.float32)
+    vm.vwrite(jnp.asarray(np.arange(usable) * ps, jnp.int32),
+              jnp.asarray(vals))
+    vm.swap_out(0)                         # host holds page 0
+    vm.swap_out(1)                         # demotes page 0 to spill
+    assert vm.stats()["spilled_pages"] == 1
+    vm.map_page(usable + 2)                # retake a freed frame
+    vm.map_page(usable + 3)                # pool full again
+    # page 0 is on SPILL and the pool is full: the fault must evict an
+    # LRU victim and still produce page 0's original bytes
+    out = np.asarray(vm.vread(jnp.asarray([0], jnp.int32)))
+    np.testing.assert_allclose(out[0], vals[0], rtol=1e-6)
+    assert vm.counters()["spill_ins"] == 1
+    assert vm.stats()["spilled_pages"] <= 1   # victim may have spilled down
 
 
 @pytest.mark.parametrize("cache_sets", [0, 4])
@@ -687,6 +823,139 @@ def test_block_manager_retention_reclaimed_under_pressure():
     assert bm.stats()["retained_entries"] == 0      # reclaimed, not OOF
     bm.free_seq(1)
     assert bm.shutdown() == 0
+
+
+# -- block manager spill tier (host-pressure demotion, two-hop restore) --------
+def _fill_seq(bm, seq, n_tokens, base=0):
+    bm.begin_seq(seq, base + np.arange(n_tokens, dtype=np.int32))
+    for pos in range(n_tokens):
+        bm.ensure_writable(seq, pos)
+
+
+def test_block_manager_demotes_host_to_spill_under_pressure():
+    """Tentpole: a host store too small for the swap traffic demotes its
+    pages into the spill tier (HOST -> SPILL) instead of failing the
+    eviction into recompute, and restores promote two-hop
+    (SPILL -> HOST -> DEVICE) with the exact evicted payloads."""
+    bm, io = _bm_swap(n_frames=16, n_host_frames=2, n_spill_frames=4,
+                      share_prefixes=False)
+    for s in range(3):
+        _fill_seq(bm, s, 8, base=100 * s)  # 2 pages each
+    assert bm.evict_seq(0, tag=0) == 2     # host now full
+    assert bm.evict_seq(1, tag=1) == 2     # demotes seq 0's pages to spill
+    assert bm.evict_seq(2, tag=2) == 2     # demotes seq 1's pages
+    assert bm.allocator.host_used_count() == 2
+    assert bm.allocator.spill_used_count() == 4
+    assert bm.counters["spill_out_pages"] == 4
+    assert bm.counters["host_demotions"] == 2
+    # oldest-preempted-first LRU: seq 0's record was demoted first
+    assert all(bm.allocator.is_spill_frame(f)
+               for _, f in bm._swapped[0].pages)
+    assert all(bm.allocator.is_host_frame(f)
+               for _, f in bm._swapped[2].pages)
+    # admission cost reports the two-hop pages so the restore is priced
+    cost = bm.admission_cost(np.arange(8), tag=0)
+    assert cost.has_swap and cost.swap_in_pages == 2
+    assert cost.spill_in_pages == 2
+    assert bm.admission_cost(np.arange(8), tag=2).spill_in_pages == 0
+    # restore promotes from whichever tier holds each page
+    for s in range(3):
+        assert bm.restore_seq(s, tag=s) == 2
+    assert bm.counters["spill_in_pages"] == 4
+    assert bm.allocator.host_used_count() == 0
+    assert bm.allocator.spill_used_count() == 0
+    # payloads survived the extra hop byte-for-byte (FakeIO tags them)
+    assert len(io.written) == 6
+    assert all(p[0] == "page-of" for _, p in io.written)
+    for s in range(3):
+        bm.free_seq(s)
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_demotion_prefers_prefix_snapshots():
+    """The demotion priority: snapshots of shared/retained PREFIX pages
+    are demoted before private pages, even when the private record is
+    older -- the prefix bytes usually still have a device-resident copy
+    serving the retention pool, so they are the coldest host bytes."""
+    bm, _ = _bm_swap(n_frames=16, n_host_frames=3, n_spill_frames=8)
+    prompt = np.arange(8, dtype=np.int32)
+    _fill_seq(bm, 0, 8)                    # donor: 2 pages
+    assert bm.begin_seq(1, prompt) == 8    # full prefix share
+    # evict the PRIVATE donor first (older record), the SHARER second
+    assert bm.evict_seq(0, tag=10) == 2    # donor: shared_len 0 -> private
+    assert bm.evict_seq(1, tag=11) == 2    # prefix snapshots (host now full)
+    assert bm._swapped[10].prefix_pages == 0
+    assert bm._swapped[11].prefix_pages == 2
+    # third eviction needs 2 host frames: the PREFIX snapshots must be
+    # demoted although their record is the YOUNGER one
+    _fill_seq(bm, 2, 8, base=200)
+    assert bm.evict_seq(2, tag=12) == 2
+    assert all(bm.allocator.is_spill_frame(f)
+               for _, f in bm._swapped[11].pages)
+    assert sum(bm.allocator.is_host_frame(f)
+               for _, f in bm._swapped[10].pages) >= 1
+    for tag in (10, 11, 12):
+        bm.drop_swap(tag)
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_both_tiers_full_falls_back():
+    """Recompute is the LAST resort only: evict_seq returns None exactly
+    when host + spill together cannot hold the pages."""
+    bm, _ = _bm_swap(n_frames=16, n_host_frames=1, n_spill_frames=1,
+                     share_prefixes=False)
+    _fill_seq(bm, 0, 4)                    # 1 page
+    _fill_seq(bm, 1, 4, base=50)
+    _fill_seq(bm, 2, 4, base=90)
+    assert bm.evict_seq(0, tag=0) == 1     # host full
+    assert bm.evict_seq(1, tag=1) == 1     # demote record 0 to spill
+    assert bm.evict_seq(2, tag=2) is None  # both tiers full: recompute
+    assert (bm.block_table[2] >= 0).any()  # seq 2 untouched by the attempt
+    bm.free_seq(2)
+    bm.drop_swap(0); bm.drop_swap(1)
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_spill_disabled_keeps_pr3_fallback():
+    """With n_spill_frames=0 the PR 3 behavior is byte-for-byte unchanged:
+    a full host store fails the eviction into the recompute path."""
+    bm, _ = _bm_swap(n_frames=16, n_host_frames=1, share_prefixes=False)
+    assert bm.spill is None
+    _fill_seq(bm, 0, 4)
+    _fill_seq(bm, 1, 4, base=50)
+    assert bm.evict_seq(0, tag=0) == 1
+    assert bm.evict_seq(1, tag=1) is None  # host full, no spill tier
+    bm.free_seq(1)
+    bm.drop_swap(0)
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_drop_swap_releases_spill_frames():
+    bm, _ = _bm_swap(n_frames=16, n_host_frames=2, n_spill_frames=4,
+                     share_prefixes=False)
+    _fill_seq(bm, 0, 8)
+    _fill_seq(bm, 1, 8, base=50)
+    bm.evict_seq(0, tag=0)
+    bm.evict_seq(1, tag=1)                 # record 0 demoted to spill
+    assert bm.allocator.spill_used_count() == 2
+    assert len(bm.spill) == 2
+    bm.drop_swap(0)                        # cancelled: spill bytes released
+    assert bm.allocator.spill_used_count() == 0 and len(bm.spill) == 0
+    bm.drop_swap(1)
+    assert bm.shutdown() == 0
+
+
+def test_block_manager_shutdown_counts_host_and_spill_leaks():
+    """Satellite regression: the leak detector used to report only device
+    frames, so a host (or spill) frame still allocated at shutdown --
+    capacity silently lost for the process lifetime -- passed as clean."""
+    bm, _ = _bm_swap(n_host_frames=4, n_spill_frames=4)
+    bm.allocator.alloc_host()              # a leak outside any swap record
+    assert bm.leak_counts() == {"device": 0, "host": 1, "spill": 0}
+    assert bm.shutdown() == 1
+    bm2, _ = _bm_swap(n_host_frames=4, n_spill_frames=4)
+    bm2.allocator.alloc_spill()
+    assert bm2.shutdown() == 1
 
 
 def test_block_manager_prefetch_one_token_early():

@@ -395,6 +395,46 @@ def test_serve_swap_identity_across_both_policies(rng):
     assert stats["pooled"]["leaked_frames"] == 0
 
 
+def test_serve_spill_tier_token_identity_and_cost(rng):
+    """Tentpole acceptance: with the host store sized to force demotion,
+    preempted pages overflow into the spill tier (HOST -> SPILL) and
+    resumes promote two-hop (SPILL -> HOST -> DEVICE) -- token-identically
+    to recompute and to the roomy run, and still strictly cheaper in
+    decode steps than the recompute cliff."""
+    prompts = [rng.integers(0, 64, int(rng.integers(3, 8))).astype(np.int32)
+               for _ in range(8)]
+    kw = dict(max_new=6, slots=8, share=False, pool_pages=10)
+    spilled, st_sp = _serve_pooled(rng, prompts, preempt_mode="swap",
+                                   host_frames=2, spill_frames=32, **kw)
+    rec, st_rec = _serve_pooled(rng, prompts, preempt_mode="recompute", **kw)
+    roomy, _ = _serve_pooled(rng, prompts, max_new=6, slots=8, share=False,
+                             pool_pages=64)
+    assert spilled == rec == roomy
+    assert st_sp["host_demotions"] > 0 and st_sp["spill_out_pages"] > 0
+    assert st_sp["spill_in_pages"] > 0            # two-hop promotions ran
+    assert st_sp["decode_steps"] < st_rec["decode_steps"]
+    assert st_sp["leaked_frames"] == 0
+    assert st_sp["leaked_host_frames"] == st_sp["leaked_spill_frames"] == 0
+
+
+def test_serve_host_full_recompute_fallback(rng):
+    """Satellite acceptance: preempt_mode="swap" with a host store too
+    small for any record and the spill tier DISABLED must take the
+    recompute fallback -- no swaps, token identity preserved (the demotion
+    path must not regress the PR 3 behavior when spill is off)."""
+    prompts = [rng.integers(0, 64, int(rng.integers(3, 8))).astype(np.int32)
+               for _ in range(6)]
+    kw = dict(max_new=6, slots=6, share=False, pool_pages=10)
+    fb, st_fb = _serve_pooled(rng, prompts, preempt_mode="swap",
+                              host_frames=1, spill_frames=0, **kw)
+    roomy, _ = _serve_pooled(rng, prompts, max_new=6, slots=6, share=False,
+                             pool_pages=64)
+    assert fb == roomy
+    assert st_fb["swapped"] == 0 and st_fb["preempted"] > 0
+    assert st_fb["spill_out_pages"] == 0
+    assert st_fb["leaked_frames"] == 0
+
+
 def test_serve_swap_restores_recurrent_state(rng):
     """Swap-preemption on a hybrid (attention+SSM) model: the evicted
     slot's conv/ssd state rides the swap record and is restored on resume,

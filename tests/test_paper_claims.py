@@ -94,6 +94,42 @@ def test_host_tier_fault_cost_scales_with_page_and_bandwidth():
         emulation.HostTierConfig(host_frac=1.5)
 
 
+# -- §7.2 extension, one more level down: the spill tier ----------------------
+def test_spill_tier_embeds_host_model_and_is_monotone():
+    """The three-tier model must reduce to the two-tier (host-only) model
+    at spill_frac=0 and price every additional spill fault monotonically
+    -- each tier's model embeds the one above it, the paper's emulation
+    argument applied down the hierarchy."""
+    host_frac = 0.01
+    sweep = emulation.fig_tier_sweep(1024, host_frac=host_frac)
+    assert sweep["spill_frac"][0] == 0.0
+    two_tier = emulation.slowdown(
+        emulation.DHRYSTONE, "clos", 1024, 1024,
+        host=emulation.HostTierConfig(host_frac=host_frac))
+    assert sweep["clos"][0] == pytest.approx(two_tier)
+    for net in ("clos", "mesh"):
+        vals = sweep[net]
+        assert all(b >= a for a, b in zip(vals, vals[1:])), vals
+        assert vals[-1] > vals[0]          # a fully-spilled tier shows up
+    assert sweep["spill_fault_cycles"] > sweep["host_fault_cycles"] > 0
+
+
+def test_spill_tier_cost_scales_and_orders():
+    """Spill pricing sanity: the demotion write is priced separately from
+    the promotion read, a slower device costs more, and one spill hop is
+    dearer than one PCIe hop (the tiers are ordered)."""
+    spill = emulation.SpillTierConfig()
+    assert spill.roundtrip_cycles() == pytest.approx(
+        spill.page_in_cycles() + spill.page_out_cycles())
+    slow = emulation.SpillTierConfig(read_gbps=0.5, latency_us=100.0)
+    assert slow.page_in_cycles() > spill.page_in_cycles()
+    assert spill.page_in_cycles() > emulation.HostTierConfig().page_in_cycles()
+    with pytest.raises(ValueError):
+        emulation.SpillTierConfig(spill_frac=-0.1)
+    with pytest.raises(ValueError):
+        emulation.SpillTierConfig(read_gbps=0.0)
+
+
 def test_swap_break_even_favors_swap_for_expensive_rebuilds():
     """Swapping beats recompute while faults-per-eviction stays under the
     rebuild/roundtrip ratio; a costlier rebuild raises the threshold."""

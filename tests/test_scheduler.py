@@ -124,6 +124,50 @@ def test_admission_score_pricing():
     assert host.page_in_cycles() < host.roundtrip_cycles()
 
 
+def test_admission_score_prices_two_hop_restores():
+    """A resume whose pages were demoted to the spill tier pays the extra
+    SPILL -> HOST hop: it ranks below an all-host resume of the same
+    length, but still far above a cold prefill (the point of the tier)."""
+    host, spill = emulation.HostTierConfig(), emulation.SpillTierConfig()
+    all_host = emulation.admission_score(0, 2, 4, host=host)
+    two_hop = emulation.admission_score(0, 2, 4, host=host,
+                                        spill_in_pages=2, spill=spill)
+    assert all_host > two_hop > 0.0
+    assert all_host - two_hop == 2 * spill.page_in_cycles()
+    # the spill term is per spilled page, not per swap page
+    partial = emulation.admission_score(0, 2, 4, host=host,
+                                        spill_in_pages=1, spill=spill)
+    assert all_host > partial > two_hop
+
+
+def test_admission_cost_reports_spill_pages(rng):
+    """A swap record whose pages were demoted under host pressure reports
+    spill_in_pages, so the scheduler prices the two-hop restore honestly."""
+    from repro.serve import Request, Scheduler
+    engine = _engine(pool_pages=4, slots=2, host_frames=2, spill_frames=8)
+    engine.blocks.share_prefixes = False
+    a = Request(uid=0, prompt=rng.integers(0, 64, 8).astype(np.int32),
+                max_new_tokens=8)
+    b = Request(uid=1, prompt=rng.integers(0, 64, 8).astype(np.int32),
+                max_new_tokens=8)
+    engine.admit(a, 0)
+    engine._preempt(0, np.array(engine.lengths))    # a's 2 pages fill host
+    engine.admit(b, 0)
+    engine._preempt(0, np.array(engine.lengths))    # demotes a's pages
+    cost_a = engine.admission_cost(a)
+    cost_b = engine.admission_cost(b)
+    assert cost_a.has_swap and cost_a.spill_in_pages == 2
+    assert cost_b.has_swap and cost_b.spill_in_pages == 0
+    assert cost_b.swap_in_pages == cost_a.swap_in_pages
+    # two-hop restores rank below all-host ones at equal length
+    sched = Scheduler(engine)
+    assert 0.0 < sched._score(a) < sched._score(b)
+    engine.drain_preempted()
+    engine.blocks.drop_swap(id(a))
+    engine.blocks.drop_swap(id(b))
+    engine.shutdown()
+
+
 # -- window reordering -------------------------------------------------------
 def _hot_cold_workload(rng, window, aging_steps=10_000):
     """A retained system prompt, a cold head too big to matter, hot-prefix
