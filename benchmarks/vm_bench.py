@@ -4,9 +4,12 @@ pooled-vs-fixed slot utilization, the shared-prefix serving workload
 the swap/churn workload (preempt+swap+restore vs recompute, plus the
 retained-prefix hit rate across an idle gap), the tiered-churn workload
 (host pool sized to force HOST -> SPILL demotion; spill-resume vs
-recompute), and the residency-aware scheduling workload (mixed
+recompute), the residency-aware scheduling workload (mixed
 hot-prefix/cold traffic: bounded-window admission reordering vs FIFO at
-equal KV bytes).
+equal KV bytes), and the SLO workload (a seeded Poisson/Zipf trace
+replayed against the step loop so requests genuinely queue: p99 TTFT and
+mean inter-token latency in decode steps, across both kv_layout policies
+and both preempt_modes, token-identical per uid and seed-reproducible).
 
 Also consolidates the results into ``BENCH_vm.json`` at the repo root so the
 perf trajectory of the virtual-memory subsystem is tracked PR over PR: every
@@ -500,21 +503,128 @@ def _sched_rows(record: dict, smoke: bool = False) -> list[dict]:
 
 
 # ---------------------------------------------------------------------------
+# SLO workload (trace-driven load: Poisson arrivals, Zipf prompt popularity)
+# ---------------------------------------------------------------------------
+#: one trace for every slo run, smoke and full alike -- the schedule IS the
+#: committed baseline's identity, so the gate can compare across modes
+_SLO_TRACE = dict(seed=11, n_requests=18, arrival_rate=0.35, n_prompts=6,
+                  zipf_alpha=1.2, prompt_len_short=4, prompt_len_long=12,
+                  prompt_long_frac=0.25, tail_len=2, out_len_short=2,
+                  out_len_long=6, out_long_frac=0.25, vocab_size=64)
+
+
+def _run_slo(layout: str, preempt_mode: str, pool: int, slots: int,
+             retain: int):
+    """One trace replay; returns (per-uid outputs, telemetry summary)."""
+    from repro.serve import (EngineConfig, Scheduler, SchedulerConfig,
+                             ServeEngine, TraceConfig, generate, replay)
+    model, params = _tiny_model(pool_pages=pool, layout=layout)
+    retain = retain if layout == "pooled" else 0
+    with ServeEngine(model, params,
+                     EngineConfig(slots=slots, max_len=32,
+                                  preempt_mode=preempt_mode,
+                                  retain_frames=retain)) as engine:
+        sched = Scheduler(engine, SchedulerConfig(window=4))
+        done = replay(generate(TraceConfig(**_SLO_TRACE)), sched)
+    stats = engine.shutdown()
+    return {r.uid: tuple(r.output) for r in done}, stats["telemetry"]
+
+
+def _slo_rows(record: dict, smoke: bool = False) -> list[dict]:
+    """Per-request SLO telemetry under trace-driven load: the number a
+    deployment actually buys.  A seeded Poisson/Zipf/bimodal trace (24
+    requests over 6 prompts, hot head shared + retained) is replayed
+    against the real step loop -- arrivals genuinely queue -- through both
+    kv_layout policies and both preempt_modes.  Asserted: per-uid token
+    identity across all four configurations (the memory policy must never
+    change tokens, only latency), and exact seed-reproducibility of the
+    headline numbers (the gate meaningless otherwise).  Headlines (both
+    LOWER is better, gated at >15% regression): p99 TTFT and mean
+    inter-token latency in decode steps, from the pooled+swap
+    configuration every prior workload crowned.  One reserved-policy run
+    covers both preempt_modes on that layout: reserved tables own their
+    worst case, so the pool can never exhaust and the mode is never
+    consulted."""
+    pool, slots, retain = 10, 4, 4
+    out_ps, tel_ps = _run_slo("pooled", "swap", pool, slots, retain)
+    out_pr, tel_pr = _run_slo("pooled", "recompute", pool, slots, retain)
+    out_gs, _ = _run_slo("paged", "swap", pool, slots, retain)
+    assert out_ps == out_pr == out_gs, \
+        "kv_layout/preempt_mode changed decoded tokens under trace load"
+    out_rerun, tel_rerun = _run_slo("pooled", "swap", pool, slots, retain)
+    assert out_rerun == out_ps and tel_rerun == tel_ps, \
+        "same-seed trace replay did not reproduce identical telemetry"
+    assert tel_ps["completed"] == _SLO_TRACE["n_requests"]
+    assert tel_ps["queue_wait_steps"]["max"] > 0, \
+        "trace did not produce queueing (arrival rate too low?)"
+    assert tel_ps["preemptions"] > 0, \
+        "trace did not pressure the pool (preempt_modes not exercised)"
+    # the swap tier's decode-step savings must show up where a deployment
+    # reads them: per-request latency, not just aggregate step counts
+    assert tel_ps["itl_steps"]["mean"] <= tel_pr["itl_steps"]["mean"], (
+        f"swap-resume mean ITL {tel_ps['itl_steps']['mean']} worse than "
+        f"recompute {tel_pr['itl_steps']['mean']}")
+    p99_ttft = tel_ps["ttft_steps"]["p99"]
+    mean_itl = tel_ps["itl_steps"]["mean"]
+    record["slo"] = {
+        "trace": dict(_SLO_TRACE),
+        "pool_pages": pool, "slots": slots, "retain_frames": retain,
+        "completed": tel_ps["completed"],
+        "p99_ttft_steps": p99_ttft,
+        "mean_itl_steps": mean_itl,
+        "p50_ttft_steps": tel_ps["ttft_steps"]["p50"],
+        "p95_ttft_steps": tel_ps["ttft_steps"]["p95"],
+        "p99_itl_steps": tel_ps["itl_steps"]["p99"],
+        "p95_queue_wait_steps": tel_ps["queue_wait_steps"]["p95"],
+        "decode_steps": tel_ps["steps"],
+        "preemptions": tel_ps["preemptions"],
+        "shared_tokens": tel_ps["shared_tokens"],
+        "monitor_spikes": tel_ps["monitor"]["spikes"],
+        "monitor_regressions": tel_ps["monitor"]["regressions"],
+        "p99_ttft_steps_recompute": tel_pr["ttft_steps"]["p99"],
+        "mean_itl_steps_recompute": tel_pr["itl_steps"]["mean"],
+    }
+    return [
+        row("vm/slo/ttft", 0.0,
+            f"p50={tel_ps['ttft_steps']['p50']} "
+            f"p95={tel_ps['ttft_steps']['p95']} "
+            f"p99={p99_ttft} decode steps (pooled+swap)"),
+        row("vm/slo/itl", 0.0,
+            f"mean={mean_itl} p99={tel_ps['itl_steps']['p99']} decode "
+            f"steps across {tel_ps['itl_steps']['n']} gaps"),
+        row("vm/slo/load", 0.0,
+            f"{tel_ps['completed']} req, "
+            f"queue-wait p95={tel_ps['queue_wait_steps']['p95']}, "
+            f"{tel_ps['preemptions']} preemptions, "
+            f"{tel_ps['monitor']['spikes']} TTFT spikes"),
+    ]
+
+
+# ---------------------------------------------------------------------------
 # BENCH_vm.json bookkeeping: meta stamps, history, regression gate
 # ---------------------------------------------------------------------------
 #: sections re-measured identically by smoke runs (mergeable + gateable)
 _SERVING_SECTIONS = ("prefix_sharing", "swap", "tiered", "retention",
-                     "scheduling")
-#: headline metric per section for history and the regression gate
-#: (all higher-is-better)
+                     "scheduling", "slo")
+#: headline metrics per section for history and the regression gate:
+#: tuples of (metric key, lower_is_better) -- throughput/ratio metrics are
+#: higher-is-better, the SLO latency metrics are lower-is-better
 _HEADLINES = {
-    "prefix_sharing": "concurrency_ratio",
-    "swap": "decode_step_ratio",
-    "tiered": "decode_step_ratio",
-    "retention": "retained_hit_rate",
-    "scheduling": "tokens_per_step_ratio",
+    "prefix_sharing": (("concurrency_ratio", False),),
+    "swap": (("decode_step_ratio", False),),
+    "tiered": (("decode_step_ratio", False),),
+    "retention": (("retained_hit_rate", False),),
+    "scheduling": (("tokens_per_step_ratio", False),),
+    "slo": (("p99_ttft_steps", True), ("mean_itl_steps", True)),
 }
 _HISTORY_LIMIT = 50
+
+
+def _headline_items():
+    """Flat (section, metric key, lower_is_better) iteration."""
+    for sec, metrics in _HEADLINES.items():
+        for key, lower_is_better in metrics:
+            yield sec, key, lower_is_better
 
 
 def _git(*args: str) -> str:
@@ -548,7 +658,7 @@ def _load_baseline() -> dict:
 def _history_entry(prior: dict) -> dict | None:
     """Compress a prior record to its identity + headline numbers."""
     heads = {f"{sec}_{key}": prior[sec][key]
-             for sec, key in _HEADLINES.items()
+             for sec, key, _ in _headline_items()
              if isinstance(prior.get(sec), dict) and key in prior[sec]}
     if not heads:
         return None
@@ -580,34 +690,55 @@ def _merge_record(record: dict, smoke: bool) -> dict:
     return merged
 
 
-def check_gate(record: dict, max_regression: float = 0.15) -> list[str]:
+def check_gate(record: dict, max_regression: float = 0.15,
+               notes: list[str] | None = None) -> list[str]:
     """Compare this run's headline numbers against the committed baseline;
     return a list of failure messages for metrics that regressed by more
-    than ``max_regression`` (all headline metrics are higher-is-better).
+    than ``max_regression`` (in the metric's own direction: ratio/rate
+    headlines are higher-is-better, the SLO latency headlines are
+    lower-is-better).
 
-    Metrics absent from the BASELINE are skipped (the gate tolerates a
-    baseline predating a workload), but a baseline metric missing from the
-    CURRENT run is a failure: a workload that silently stops emitting its
+    The two missing-side cases are deliberately asymmetric.  A metric the
+    CURRENT run emits but the baseline lacks is a *newly added* workload:
+    it passes, and a note is appended to ``notes`` (when given) so the log
+    records that it ran ungated -- it becomes gated once a full run
+    commits it to the baseline.  A BASELINE metric missing from the
+    current run is a failure: a workload that silently stops emitting its
     headline number would otherwise pass the gate exactly when it is most
     broken."""
     baseline = _load_baseline()
     failures = []
-    for sec, key in _HEADLINES.items():
+    for sec, key, lower_is_better in _headline_items():
         base = baseline.get(sec, {})
-        if not (isinstance(base, dict) and key in base):
-            continue                     # baseline predates this workload
         cur = record.get(sec, {})
-        if not (isinstance(cur, dict) and key in cur):
+        has_cur = isinstance(cur, dict) and key in cur
+        if not (isinstance(base, dict) and key in base):
+            # baseline predates this workload: newly added metrics pass
+            if has_cur and notes is not None:
+                notes.append(
+                    f"{sec}.{key}: newly added ({cur[key]}), no baseline "
+                    f"to gate against -- gated from the next committed "
+                    f"BENCH_vm.json on")
+            continue
+        if not has_cur:
             failures.append(
                 f"{sec}.{key}: baseline has {base[key]} but the current "
                 f"run emitted no value (workload silently dropped?)")
             continue
-        floor = float(base[key]) * (1.0 - max_regression)
-        if float(cur[key]) < floor:
-            failures.append(
-                f"{sec}.{key}: {cur[key]} < {floor:.3f} "
-                f"(baseline {base[key]}, allowed regression "
-                f"{max_regression:.0%})")
+        if lower_is_better:
+            ceiling = float(base[key]) * (1.0 + max_regression)
+            if float(cur[key]) > ceiling:
+                failures.append(
+                    f"{sec}.{key}: {cur[key]} > {ceiling:.3f} "
+                    f"(baseline {base[key]}, allowed regression "
+                    f"{max_regression:.0%}, lower is better)")
+        else:
+            floor = float(base[key]) * (1.0 - max_regression)
+            if float(cur[key]) < floor:
+                failures.append(
+                    f"{sec}.{key}: {cur[key]} < {floor:.3f} "
+                    f"(baseline {base[key]}, allowed regression "
+                    f"{max_regression:.0%})")
     return failures
 
 
@@ -616,7 +747,7 @@ def collect(smoke: bool = False) -> tuple[list[dict], dict]:
     out = (_throughput_rows(record, smoke) + _utilization_rows(record)
            + _prefix_rows(record, smoke) + _swap_rows(record, smoke)
            + _tiered_rows(record, smoke) + _retention_rows(record, smoke)
-           + _sched_rows(record, smoke))
+           + _sched_rows(record, smoke) + _slo_rows(record, smoke))
     return out, record
 
 
@@ -655,8 +786,12 @@ def main() -> None:
                          "the committed BENCH_vm.json baseline")
     args = ap.parse_args()
     out, record = collect(smoke=args.smoke)
-    failures = check_gate(record) if args.gate else []   # vs pre-write file
+    notes: list[str] = []
+    failures = (check_gate(record, notes=notes)   # vs the pre-write file
+                if args.gate else [])
     print_csv(_finalize(out, record, args.smoke))
+    for msg in notes:
+        print("bench gate note: " + msg, file=sys.stderr)
     if failures:
         print("bench regression gate FAILED:", file=sys.stderr)
         for msg in failures:

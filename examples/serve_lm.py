@@ -56,6 +56,20 @@ def main():
               f"{engine.pool_stats()}")
         for r in done[:3]:
             print(f"  req {r.uid}: {list(r.prompt[:4])}... -> {r.output}")
+        # per-request SLO table: every latency an exact decode-step count
+        print("  uid  wait  ttft  mean_itl  tokens  preempt  shared")
+        for row in engine.metrics.request_rows():
+            print(f"  {row['uid']:>3}  {row['queue_wait']:>4}  "
+                  f"{row['ttft']:>4}  {row['mean_itl']!s:>8}  "
+                  f"{row['tokens']:>6}  {row['preemptions']:>7}  "
+                  f"{row['shared_tokens']:>6}")
+        tel = engine.telemetry()
+        print(f"  ttft p50/p95/p99 = {tel['ttft_steps']['p50']}/"
+              f"{tel['ttft_steps']['p95']}/{tel['ttft_steps']['p99']} steps, "
+              f"itl mean = {tel['itl_steps']['mean']} steps")
+        mon = tel["monitor"]
+        print(f"  monitor: median={mon['median']} spikes={mon['spikes']} "
+              f"regressions={mon['regressions']} over {mon['samples']} reqs")
     print(f"shutdown: {engine.shutdown()}")
 
 

@@ -9,13 +9,15 @@ export XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
 python -m pytest -x -q "$@"
 
-# vm_bench smoke (incl. the swap/churn, retention and scheduling
-# workloads) must stay inside the CI budget: allocator/engine/residency
-# regressions crash it, slowdowns fail the 30 s gate.  --gate additionally
-# compares the smoke run's headline numbers (shared-prefix concurrency,
-# swap decode-step savings, retention hit rate, scheduling tokens/step)
-# against the committed BENCH_vm.json baseline and fails on a >15%
-# regression, so the scheduling/residency gains cannot silently rot.
+# vm_bench smoke (incl. the swap/churn, retention, scheduling and
+# trace-driven slo workloads) must stay inside the CI budget:
+# allocator/engine/residency regressions crash it, slowdowns fail the
+# 30 s gate.  --gate additionally compares the smoke run's headline
+# numbers (shared-prefix concurrency, swap decode-step savings, retention
+# hit rate, scheduling tokens/step, and -- lower-is-better -- the slo
+# workload's p99 TTFT + mean ITL in decode steps) against the committed
+# BENCH_vm.json baseline and fails on a >15% regression, so the
+# scheduling/residency/latency gains cannot silently rot.
 SMOKE_BUDGET_S=30
 start=$(date +%s)
 python -m benchmarks.vm_bench --smoke --gate

@@ -2,6 +2,15 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --requests 6 --prompt-len 12 --max-new 16
+
+``--trace`` switches from submit-everything-up-front to a seeded synthetic
+trace (Poisson arrivals, Zipf prompt popularity, bimodal lengths) replayed
+against the engine's decode-step clock, so requests genuinely queue; the
+output JSON then includes the per-request SLO telemetry (p50/p95/p99 TTFT,
+inter-token latency, queue wait -- all in decode steps):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --trace --requests 24 --arrival-rate 0.3 --zipf-alpha 1.2
 """
 from __future__ import annotations
 
@@ -16,6 +25,7 @@ from repro.configs import get_config, get_smoke_config, list_archs
 from repro.models.model import Model
 from repro.serve.engine import EngineConfig, Request, ServeEngine
 from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.serve.tracegen import TraceConfig, generate, replay
 
 
 def main() -> None:
@@ -54,6 +64,17 @@ def main() -> None:
                     default=SchedulerConfig.aging_steps,
                     help="decode steps a passed-over request waits before "
                          "it outranks every admission score")
+    ap.add_argument("--trace", action="store_true",
+                    help="replay a seeded synthetic trace (Poisson "
+                         "arrivals, Zipf prompt popularity) instead of "
+                         "submitting every request up front")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="trace rng seed: the same seed reproduces the "
+                         "schedule byte-for-byte")
+    ap.add_argument("--arrival-rate", type=float, default=0.25,
+                    help="mean trace arrivals per decode step")
+    ap.add_argument("--zipf-alpha", type=float, default=1.2,
+                    help="prompt-popularity skew (larger = hotter head)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -64,13 +85,6 @@ def main() -> None:
     model = Model(cfg)
     params = model.init(jax.random.key(args.seed))
 
-    rng = np.random.default_rng(args.seed)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
-
     engine = ServeEngine(model, params, EngineConfig(
         slots=args.slots, max_len=args.max_len,
         preempt_mode=args.preempt_mode, retain_frames=args.retain_frames,
@@ -78,15 +92,33 @@ def main() -> None:
         spill_path=args.spill_path))
     sched = Scheduler(engine, SchedulerConfig(window=args.sched_window,
                                               aging_steps=args.aging_steps))
-    sched.submit(reqs)
     t0 = time.monotonic()
-    done = sched.run()
+    if args.trace:
+        tcfg = TraceConfig(
+            seed=args.trace_seed, n_requests=args.requests,
+            arrival_rate=args.arrival_rate, zipf_alpha=args.zipf_alpha,
+            prompt_len_short=max(2, args.prompt_len // 2),
+            prompt_len_long=args.prompt_len,
+            out_len_short=max(1, args.max_new // 2),
+            out_len_long=args.max_new, vocab_size=cfg.vocab_size)
+        done = replay(generate(tcfg), sched)
+    else:
+        rng = np.random.default_rng(args.seed)
+        sched.submit([Request(uid=i,
+                              prompt=rng.integers(0, cfg.vocab_size,
+                                                  args.prompt_len)
+                              .astype(np.int32),
+                              max_new_tokens=args.max_new)
+                      for i in range(args.requests)])
+        done = sched.run()
     dt = time.monotonic() - t0
+    stats = engine.shutdown()
     total_new = sum(len(r.output) for r in done)
     print(json.dumps({
         "completed": len(done), "new_tokens": total_new,
         "tokens_per_s": round(total_new / dt, 1),
         "outputs": {r.uid: r.output[:8] for r in done},
+        "telemetry": stats["telemetry"],
     }, indent=1))
 
 

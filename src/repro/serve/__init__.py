@@ -1,2 +1,6 @@
 from repro.serve.engine import EngineConfig, Request, ServeEngine  # noqa: F401
 from repro.serve.scheduler import Scheduler, SchedulerConfig  # noqa: F401
+from repro.serve.telemetry import (RollingMonitor, StepClock,  # noqa: F401
+                                   Telemetry, percentile)
+from repro.serve.tracegen import (TraceConfig, TraceItem,  # noqa: F401
+                                  generate, replay)

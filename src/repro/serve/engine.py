@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serve.telemetry import Telemetry
 
 
 @dataclasses.dataclass
@@ -97,6 +98,9 @@ class EngineConfig:
     spill_frames: int = 0
     #: directory backing the spill store (None: in-memory bytes)
     spill_path: str | None = None
+    #: sliding-window size of the rolling TTFT monitor
+    #: (telemetry.RollingMonitor: median + spike/regression detection)
+    telemetry_window: int = 32
 
 
 class ServeEngine:
@@ -128,6 +132,10 @@ class ServeEngine:
         #: must only trust committed KV
         self._kv_committed = np.zeros(ecfg.slots, np.int64)
         self._shutdown_stats: dict | None = None
+        #: per-request SLO telemetry (lifecycle traces, TTFT/ITL
+        #: percentiles, rolling monitor); its StepClock ticks once per
+        #: jitted decode, so every latency is decode-step denominated
+        self.metrics = Telemetry(monitor_window=ecfg.telemetry_window)
         self.counters = {"admitted": 0, "completed": 0, "preempted": 0,
                          "swapped": 0, "swap_resumed": 0, "aborted": 0,
                          "decode_steps": 0, "shared_prompt_tokens": 0,
@@ -213,6 +221,7 @@ class ServeEngine:
                                          jnp.array(write_mask))
         jax.block_until_ready(logits)
         self.counters["decode_steps"] += 1
+        self.metrics.clock.tick()
         return logits, cache
 
     # -- frame management (both paged layouts, via the BlockManager) ---------
@@ -301,7 +310,9 @@ class ServeEngine:
             req.done = True
             self.counters["completed"] += 1
             self.completed_reqs.append(req)
+            self.metrics.on_complete(req)
             return
+        swapped = False
         if self.blocks is not None:
             tag = id(req)
             if self.blocks.evict_seq(slot, tag) is not None:
@@ -312,9 +323,11 @@ class ServeEngine:
                              "next": getattr(req, "_next", None),
                              "slot_state": self._slot_state_read(slot)}
                 self.counters["swapped"] += 1
+                swapped = True
             else:
                 self.blocks.release_seq(slot, completed=False)
         self.counters["preempted"] += 1
+        self.metrics.on_preempt(req, swapped=swapped)
         self.preempted.append(req)
 
     def drain_preempted(self) -> list[Request]:
@@ -344,6 +357,14 @@ class ServeEngine:
             return {}
         return self.blocks.stats()
 
+    def telemetry(self) -> dict:
+        """Live per-request SLO telemetry summary: exact p50/p95/p99 TTFT,
+        inter-token-latency and queue-wait percentiles over completed
+        requests (decode-step denominated) plus the rolling-monitor state.
+        The same snapshot is folded into the ``shutdown()`` stats under
+        the ``"telemetry"`` key."""
+        return self.metrics.summary()
+
     def shutdown(self, abort: bool = False) -> dict:
         """Leak detector: at shutdown every frame reference -- device, host
         AND spill tier -- must have been released (the BlockManager drains
@@ -351,10 +372,14 @@ class ServeEngine:
         counts as zero).  A host- or spill-store leak fails shutdown
         exactly like a device leak: parked payloads nobody can restore are
         silently lost capacity.  Idempotent: a second call returns the
-        recorded stats.  ``abort=True`` releases still-active requests
-        instead of refusing (the context-manager exit path when the body
-        raised).  Returns the engine counters (dispatch_stats-style);
-        raises if any sequence is still active or any frame leaked."""
+        recorded stats dict -- the telemetry summary is snapshotted into it
+        ONCE, on the first call (abort paths included), so every later
+        caller sees the same dict, telemetry keys and all.  ``abort=True``
+        releases still-active requests instead of refusing (the
+        context-manager exit path when the body raised).  Returns the
+        engine counters (dispatch_stats-style) plus the ``"telemetry"``
+        section; raises if any sequence is still active or any frame
+        leaked."""
         if self._shutdown_stats is not None:
             return self._shutdown_stats
         active = [r.uid for r in self.slot_req if r is not None]
@@ -365,6 +390,7 @@ class ServeEngine:
                 continue
             self.slot_req[i] = None
             self.counters["aborted"] += 1
+            self.metrics.on_abort(r)
             if self.blocks is not None:
                 self.blocks.release_seq(i, completed=False)
         leaked = self.blocks.shutdown() if self.blocks is not None else 0
@@ -377,6 +403,10 @@ class ServeEngine:
             stats.update(self.blocks.counters)
             stats["shared_prompt_tokens"] = \
                 self.blocks.counters["shared_tokens"]
+        # snapshot the telemetry summary into the dict BEFORE caching, so
+        # repeated shutdown() calls (abort-first included) all return the
+        # identical dict with the recorded SLO section
+        stats["telemetry"] = self.metrics.summary()
         if leaked:
             raise RuntimeError(
                 f"KV frame leak at shutdown: {leaked} frames still "
@@ -448,7 +478,15 @@ class ServeEngine:
                 and self.blocks.has_swap(swap["tag"]):
             # no _reset_slot: the restore overwrites every per-slot field it
             # would zero (lengths, committed KV, the whole slot state)
+            swap_in0 = self.blocks.counters["swap_in_pages"]
+            spill_in0 = self.blocks.counters["spill_in_pages"]
             self.blocks.restore_seq(slot, swap["tag"], toks)
+            self.metrics.on_admit(
+                req, resumed=True,
+                swap_in_pages=self.blocks.counters["swap_in_pages"]
+                - swap_in0,
+                spill_in_pages=self.blocks.counters["spill_in_pages"]
+                - spill_in0)
             self._slot_state_write(slot, swap["slot_state"])
             start = int(swap["committed"])
             req._next = swap["next"]
@@ -469,6 +507,7 @@ class ServeEngine:
             if self.blocks is not None:
                 shared = self.blocks.begin_seq(slot, toks)
                 self.counters["shared_prompt_tokens"] += shared
+            self.metrics.on_admit(req, shared_tokens=shared)
             start = min(shared, len(toks) - 1)
         mask = np.zeros(self.ecfg.slots, bool)
         mask[slot] = True                # only this slot commits KV writes
@@ -489,6 +528,7 @@ class ServeEngine:
                 mask)
             self._kv_committed[slot] = t + 1
         req._next = int(jnp.argmax(logits[slot, :self.model.cfg.vocab_size]))
+        self.metrics.on_token(req, len(req.output))
         self.counters["admitted"] += 1
 
     def _reset_slot(self, slot: int) -> None:
@@ -546,6 +586,7 @@ class ServeEngine:
             req = self.slot_req[i]
             req._next = int(jnp.argmax(
                 logits[i, :self.model.cfg.vocab_size]))
+            self.metrics.on_token(req, len(req.output))
             self.budget[i] -= 1
             hit_eos = (self.ecfg.eos_id is not None
                        and req.output and req.output[-1] == self.ecfg.eos_id)
@@ -555,5 +596,6 @@ class ServeEngine:
                 self.slot_req[i] = None
                 self.counters["completed"] += 1
                 self.completed_reqs.append(req)
+                self.metrics.on_complete(req)
                 self._kv_committed[i] = 0
                 self._release(i)

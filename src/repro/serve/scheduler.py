@@ -85,7 +85,13 @@ class Scheduler:
         self._age: dict[int, int] = {}   # id(req) -> decode steps waited
 
     def submit(self, reqs: Iterable[Request]) -> None:
-        self.queue.extend(reqs)
+        """Enqueue new arrivals.  Each is stamped into the engine's
+        per-request telemetry (arrival time in decode steps -- queue wait
+        and TTFT are measured from here); preempted requests re-enter via
+        ``appendleft`` instead and keep their original arrival."""
+        for req in reqs:
+            self.engine.metrics.on_arrival(req)
+            self.queue.append(req)
 
     # -- admission policy ---------------------------------------------------
     def _score(self, req: Request) -> float:
@@ -175,23 +181,33 @@ class Scheduler:
                 self._completed_ids.add(id(req))
                 self.completed.append(req)
 
+    def tick(self) -> bool:
+        """One scheduler loop iteration: admit, decode one step, requeue
+        preemptions, account completions, age the queue.  Returns whether
+        any slot was active after admission -- False means the engine made
+        no progress this tick (idle, or an inadmissible queue head against
+        an empty engine).  ``run`` loops this until drained; the trace
+        replayer (:func:`repro.serve.tracegen.replay`) interleaves it with
+        timed arrivals so requests genuinely queue."""
+        self._admit_waiting()
+        active = any(r is not None for r in self.engine.slot_req)
+        self.engine.step()
+        self._requeue_preempted()
+        self._drain_completed()
+        for req in self.queue:
+            self._age[id(req)] = self._age.get(id(req), 0) + 1
+        return active
+
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Drive until all submitted requests complete."""
         steps = 0
         while (self.queue or any(r is not None
                                  for r in self.engine.slot_req)):
-            self._admit_waiting()
-            if not any(r is not None for r in self.engine.slot_req) \
-                    and self.queue:
+            if not self.tick() and self.queue:
                 raise RuntimeError(
                     f"request uid={self.queue[0].uid} can never be admitted "
                     f"(prompt too long for max_len, or needs more KV frames "
                     f"than the pool holds)")
-            self.engine.step()
-            self._requeue_preempted()
-            self._drain_completed()
-            for req in self.queue:
-                self._age[id(req)] = self._age.get(id(req), 0) + 1
             steps += 1
             if steps > max_steps:
                 raise RuntimeError("scheduler exceeded max_steps")

@@ -75,6 +75,58 @@ def test_gate_fails_when_headline_metric_missing_from_run(bench_path):
     assert vm_bench.check_gate(_rec(prefix=9.9, swap=1.6, sched=9.9)) == []
 
 
+def test_gate_passes_new_section_with_note(bench_path):
+    """Satellite: a metric present in the current run but absent from the
+    baseline is a newly added workload -- it passes, and the gate records
+    a note so the log shows it ran ungated.  The reverse direction (in the
+    baseline, missing from the run) stays a loud failure."""
+    bench_path.write_text(json.dumps(_rec()))          # baseline has no slo
+    cur = {**_rec(), "slo": {"p99_ttft_steps": 72.0, "mean_itl_steps": 2.7}}
+    notes = []
+    assert vm_bench.check_gate(cur, notes=notes) == []
+    assert len(notes) == 2
+    assert any("slo.p99_ttft_steps" in n and "newly added" in n
+               for n in notes)
+    assert any("slo.mean_itl_steps" in n for n in notes)
+    # notes list is optional: passing none must not crash the same path
+    assert vm_bench.check_gate(cur) == []
+    # reverse direction: baseline gained slo, current run dropped it
+    bench_path.write_text(json.dumps(cur))
+    fails = vm_bench.check_gate(_rec(), notes=(notes := []))
+    assert len(fails) == 2 and notes == []
+    assert all("no value" in f for f in fails)
+
+
+def test_gate_lower_is_better_direction(bench_path):
+    """The SLO latency headlines gate in the opposite direction from the
+    ratio headlines: regressions are INCREASES."""
+    base = {**_rec(), "slo": {"p99_ttft_steps": 72.0, "mean_itl_steps": 2.7}}
+    bench_path.write_text(json.dumps(base))
+    ok = lambda p99, itl: {**_rec(),
+                           "slo": {"p99_ttft_steps": p99,
+                                   "mean_itl_steps": itl}}
+    # big improvement (much lower latency) passes -- would fail if the
+    # gate applied the higher-is-better floor to these metrics
+    assert vm_bench.check_gate(ok(10.0, 1.0)) == []
+    # within the 15% ceiling passes
+    assert vm_bench.check_gate(ok(80.0, 3.0)) == []
+    # beyond the ceiling: one named failure per regressed metric
+    fails = vm_bench.check_gate(ok(90.0, 3.5))
+    assert len(fails) == 2
+    assert any("p99_ttft_steps" in f and "lower is better" in f
+               for f in fails)
+
+
+def test_history_entry_includes_slo_headlines(bench_path):
+    prior = {**_rec(), "slo": {"p99_ttft_steps": 72.0,
+                               "mean_itl_steps": 2.763}}
+    bench_path.write_text(json.dumps(prior))
+    vm_bench._write(_rec(), smoke=False)
+    out = json.loads(bench_path.read_text())
+    assert out["history"][0]["slo_p99_ttft_steps"] == 72.0
+    assert out["history"][0]["slo_mean_itl_steps"] == 2.763
+
+
 def test_gate_fails_on_regression_only(bench_path):
     bench_path.write_text(json.dumps(_rec(prefix=2.0, swap=1.6, sched=1.9)))
     # within 15%: no failure

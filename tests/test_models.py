@@ -562,7 +562,33 @@ def test_engine_shutdown_idempotent(rng):
     while engine.slot_req[0] is not None:
         engine.step()
     first = engine.shutdown()
-    assert engine.shutdown() is first    # second call: recorded stats, no re-run
+    again = engine.shutdown()
+    assert again is first    # second call: recorded stats, no re-run
+    # satellite regression: the telemetry summary used to be re-computed
+    # per call AFTER caching, so the second dict lacked / differed in the
+    # telemetry section.  It must be snapshotted once, into the cached dict.
+    assert "telemetry" in first and again["telemetry"] == first["telemetry"]
+    assert first["telemetry"]["completed"] == 1
+    assert first["telemetry"]["ttft_steps"]["n"] == 1
+
+
+def test_engine_shutdown_idempotent_after_abort(rng):
+    """The abort path (context-manager exit while a request is live) must
+    also snapshot telemetry once: repeated shutdowns return the identical
+    dict, with the aborted request counted in it."""
+    from repro.serve import EngineConfig, Request, ServeEngine
+    cfg = _pooled_cfg(pool_pages=16)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, EngineConfig(slots=1, max_len=32))
+    req = Request(uid=0, prompt=rng.integers(0, 64, 4).astype(np.int32),
+                  max_new_tokens=4)
+    engine.admit(req, 0)
+    engine.step()                        # live mid-generation, then abort
+    first = engine.shutdown(abort=True)
+    assert engine.shutdown() is first
+    assert first["telemetry"]["aborted"] == 1
+    assert first["telemetry"]["completed"] == 0
 
 
 def test_serve_preemption_token_identity(rng):

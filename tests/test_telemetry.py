@@ -1,0 +1,216 @@
+"""Per-request SLO telemetry: exact percentile math, the decode-step
+clock, the rolling spike/regression monitor, and the engine lifecycle
+integration (arrival -> admit -> first token -> completion, with
+preemption / swap-hop attribution)."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_dense_cfg
+from repro.models import Model
+from repro.serve.telemetry import (RequestTrace, RollingMonitor, StepClock,
+                                   Telemetry, _dist, percentile)
+
+
+# -- percentile math ----------------------------------------------------------
+def test_percentile_matches_numpy(rng):
+    """The aggregator promises numpy.percentile's default (linear
+    interpolation) exactly -- checked over random sample sets and sizes,
+    including the interpolation-heavy odd/even boundary cases."""
+    for n in (2, 3, 4, 5, 7, 10, 33, 100):
+        xs = rng.normal(50.0, 20.0, n).tolist()
+        for q in (0, 1, 25, 50, 75, 90, 95, 99, 99.9, 100):
+            assert percentile(xs, q) == pytest.approx(
+                float(np.percentile(xs, q)), abs=1e-9), (n, q)
+
+
+def test_percentile_edge_cases():
+    assert percentile([], 50) is None          # numpy raises; we decline
+    assert percentile([7.0], 0) == 7.0
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([7.0], 100) == 7.0
+    assert percentile([1, 2], 50) == 1.5       # int inputs, interpolated
+    assert _dist([]) == {"n": 0}
+    d = _dist([4])
+    assert d["n"] == 1 and d["p50"] == 4.0 and d["mean"] == 4.0
+
+
+# -- the decode-step clock ----------------------------------------------------
+def test_step_clock():
+    clock = StepClock()
+    assert clock.now() == 0
+    clock.tick()
+    clock.tick(5)
+    assert clock.now() == 6
+
+
+# -- request trace arithmetic -------------------------------------------------
+def test_request_trace_properties():
+    tr = RequestTrace(uid=0, arrival=10)
+    assert tr.queue_wait is None and tr.ttft is None and tr.itl_gaps() == []
+    tr.admit = 14
+    tr.token_steps = [20, 22, 25]
+    assert tr.queue_wait == 4
+    assert tr.ttft == 10                       # arrival -> first token
+    assert tr.itl_gaps() == [2, 3]
+
+
+def test_on_token_first_production_wins():
+    """A recompute replay re-producing token i must not move its
+    timestamp -- the replay cost lands in the following gaps."""
+    tel = Telemetry()
+
+    class Req:
+        uid = 0
+        output = []
+    req = Req()
+    tel.clock.tick(3)
+    tel.on_token(req, 0)                       # produced at step 3
+    tel.clock.tick(10)
+    tel.on_token(req, 0)                       # replayed at step 13: ignored
+    tel.on_token(req, 1)
+    assert req._trace.token_steps == [3, 13]
+    tel.clock.tick(1)
+    tel.on_token(req, 3)                       # out-of-order index: ignored
+    assert req._trace.token_steps == [3, 13]
+
+
+def test_on_complete_truncates_speculative_token():
+    """The completing decode computes one speculative next token that is
+    never appended to the output; its timestamp must not pollute ITL."""
+    tel = Telemetry()
+
+    class Req:
+        uid = 0
+        output = [1, 2]                        # two real tokens
+    req = Req()
+    for step in (1, 2, 3):                     # three recorded productions
+        tel.clock.tick()
+        tel.on_token(req, step - 1)
+    tel.on_complete(req)
+    assert req._trace.token_steps == [1, 2]
+    assert req._trace.completion == 3
+
+
+# -- rolling monitor ----------------------------------------------------------
+def test_monitor_rejects_degenerate_window():
+    with pytest.raises(ValueError):
+        RollingMonitor(window=1)
+
+
+def test_monitor_spike_detection():
+    mon = RollingMonitor(window=8, spike_factor=3.0, min_samples=4)
+    # below min_samples nothing fires, even for a huge outlier
+    assert mon.push(100.0) is False
+    for _ in range(3):
+        assert mon.push(10.0) is False
+    assert mon.push(10.0) is False             # median ~10, not a spike
+    assert mon.push(31.0) is True              # > 3 x median
+    assert mon.spikes == 1
+    assert mon.summary()["spikes"] == 1
+
+
+def test_monitor_regression_rising_edge():
+    """A sustained drift counts once (rising edge), not once per sample."""
+    mon = RollingMonitor(window=8, regress_factor=1.5, min_samples=4)
+    for _ in range(8):
+        mon.push(10.0)
+    assert not mon.regressed
+    for _ in range(4):                         # newest half-window at 20:
+        mon.push(20.0)                         # 2x the oldest half's median
+    assert mon.regressions == 1 and mon.regressed
+    for _ in range(12):                        # drift settles at the new level
+        mon.push(20.0)
+    assert mon.regressions == 1 and not mon.regressed
+    for _ in range(4):                         # second drift: second edge
+        mon.push(40.0)
+    assert mon.regressions == 2
+
+
+def test_monitor_window_is_sliding():
+    mon = RollingMonitor(window=4, min_samples=2)
+    for v in (1.0, 2.0, 3.0, 4.0, 100.0, 100.0, 100.0, 100.0):
+        mon.push(v)
+    assert mon.median() == 100.0               # early samples aged out
+    assert mon.summary()["samples"] == 8
+
+
+# -- engine lifecycle integration ---------------------------------------------
+def _engine(pool_pages=24, slots=4, max_len=32, **ecfg_kw):
+    from repro.serve import EngineConfig, ServeEngine
+    cfg = tiny_dense_cfg(vocab_size=64, kv_layout="pooled", kv_page_slots=4,
+                         kv_pool_pages=pool_pages)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return ServeEngine(model, params,
+                       EngineConfig(slots=slots, max_len=max_len, **ecfg_kw))
+
+
+def test_engine_traces_request_lifecycle(rng):
+    """One queued request end to end: the trace carries queue wait, TTFT
+    and per-token production steps, and the aggregate summary agrees."""
+    from repro.serve import Request, Scheduler
+    engine = _engine(slots=1)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 64, 5).astype(np.int32),
+                    max_new_tokens=3) for i in range(2)]
+    sched = Scheduler(engine)
+    sched.submit(reqs)
+    sched.run()
+    tr0, tr1 = reqs[0]._trace, reqs[1]._trace
+    # uid 0 admits immediately; uid 1 waits for the only slot
+    assert tr0.queue_wait == 0 and tr1.queue_wait > 0
+    assert tr1.ttft > tr0.ttft
+    # prefill runs token-by-token through the decode path: first token
+    # costs at least the prompt's decode steps
+    assert tr0.ttft >= len(reqs[0].prompt)
+    for req in reqs:
+        tr = req._trace
+        assert len(tr.token_steps) == len(req.output) == 3
+        assert tr.completion is not None and tr.completion >= tr.token_steps[-1]
+        assert all(g >= 1 for g in tr.itl_gaps())
+    summary = engine.telemetry()
+    assert summary["completed"] == 2 and summary["aborted"] == 0
+    assert summary["ttft_steps"]["n"] == 2
+    assert summary["ttft_steps"]["max"] == tr1.ttft
+    assert summary["itl_steps"]["n"] == 4            # 2 gaps per request
+    rows = engine.metrics.request_rows()
+    assert [r["uid"] for r in rows] == [0, 1]
+    assert all(r["done"] and not r["aborted"] for r in rows)
+    engine.shutdown()
+
+
+def test_engine_traces_preemption_and_swap_hops(rng):
+    """A pool too small for everyone attributes preemptions, swap-backed
+    parks, resume count and PCIe page hops to the victim's trace."""
+    from repro.serve import Request, Scheduler
+    engine = _engine(pool_pages=8, slots=3, preempt_mode="swap")
+    reqs = [Request(uid=i, prompt=rng.integers(0, 64, 6).astype(np.int32),
+                    max_new_tokens=6) for i in range(3)]
+    engine.blocks.share_prefixes = False       # force genuine contention
+    sched = Scheduler(engine)
+    sched.submit(reqs)
+    sched.run()
+    victims = [r._trace for r in reqs if r._trace.preemptions > 0]
+    assert victims, "pool of 8 frames over 3 growing seqs must preempt"
+    for tr in victims:
+        assert tr.swaps == tr.preemptions      # swap mode: every park parked
+        assert tr.resumes > 0 and tr.swap_in_pages > 0
+        assert tr.admissions == tr.resumes + 1
+    summary = engine.telemetry()
+    assert summary["preemptions"] == sum(t.preemptions for t in victims)
+    assert summary["swap_in_pages"] == sum(t.swap_in_pages for t in victims)
+    assert summary["completed"] == 3
+    stats = engine.shutdown()
+    assert stats["telemetry"]["completed"] == 3
+
+
+def test_telemetry_summary_empty_engine(rng):
+    """Zero requests is no signal, not an error: the summary's
+    distributions are {'n': 0} and the monitor is silent."""
+    engine = _engine(slots=1)
+    summary = engine.telemetry()
+    assert summary["arrived"] == 0 and summary["completed"] == 0
+    assert summary["ttft_steps"] == {"n": 0}
+    assert summary["itl_steps"] == {"n": 0}
+    assert summary["monitor"]["median"] is None
+    engine.shutdown()

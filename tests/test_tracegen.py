@@ -1,0 +1,142 @@
+"""Trace-driven load generation: seeded determinism of the schedule,
+the statistical shape knobs (Poisson arrivals, Zipf popularity, bimodal
+lengths), and replay against the real engine step loop."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_dense_cfg
+from repro.models import Model
+from repro.serve.tracegen import (TraceConfig, TraceItem, generate, replay,
+                                  zipf_weights)
+
+
+# -- generation ---------------------------------------------------------------
+def test_same_seed_is_byte_identical():
+    """The schedule is pure seeded numpy arithmetic: two generations from
+    one config agree on every field, prompt bytes included -- the property
+    that makes benchmark headline numbers reproducible across platforms,
+    reruns and mesh sizes (nothing device-side feeds the rng)."""
+    cfg = TraceConfig(seed=7, n_requests=40)
+    a, b = generate(cfg), generate(cfg)
+    assert len(a) == len(b) == 40
+    for x, y in zip(a, b):
+        assert x.uid == y.uid and x.arrival_step == y.arrival_step
+        assert x.max_new_tokens == y.max_new_tokens
+        assert x.prompt_id == y.prompt_id
+        assert x.prompt.dtype == y.prompt.dtype == np.int32
+        assert np.array_equal(x.prompt, y.prompt)
+
+
+def test_different_seed_differs():
+    a = generate(TraceConfig(seed=0, n_requests=40))
+    b = generate(TraceConfig(seed=1, n_requests=40))
+    assert any(x.arrival_step != y.arrival_step
+               or not np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(a, b))
+
+
+def test_arrivals_are_nondecreasing_integer_steps():
+    items = generate(TraceConfig(seed=3, n_requests=64, arrival_rate=0.5))
+    arr = [it.arrival_step for it in items]
+    assert all(isinstance(a, int) and a >= 0 for a in arr)
+    assert arr == sorted(arr)                  # cumsum of positive gaps
+    # Poisson sanity: mean gap within a loose factor of 1/rate
+    assert 0.5 / 0.5 < arr[-1] / len(arr) < 4.0 / 0.5
+
+
+def test_zipf_weights_shape():
+    w = zipf_weights(8, 1.2)
+    assert w.sum() == pytest.approx(1.0)
+    assert all(w[i] > w[i + 1] for i in range(7))   # strictly rank-decreasing
+    assert np.array_equal(zipf_weights(5, 0.0), np.full(5, 0.2))  # uniform
+
+
+def test_zipf_head_dominates():
+    """With a skewed alpha the rank-0 prompt must be the modal pick --
+    the property the prefix-sharing stress rides on."""
+    items = generate(TraceConfig(seed=5, n_requests=200, n_prompts=8,
+                                 zipf_alpha=1.5))
+    counts = np.bincount([it.prompt_id for it in items], minlength=8)
+    assert counts[0] == counts.max()
+    assert counts[0] > 200 * 0.3               # Zipf(1.5, 8) head weight ~0.42
+
+
+def test_lengths_are_bimodal_with_fresh_tails():
+    cfg = TraceConfig(seed=9, n_requests=100, prompt_len_short=4,
+                      prompt_len_long=16, tail_len=2, out_len_short=2,
+                      out_len_long=8)
+    items = generate(cfg)
+    assert {len(it.prompt) for it in items} <= {4 + 2, 16 + 2}
+    assert {it.max_new_tokens for it in items} <= {2, 8}
+    # same population prompt, distinct random tails (COW, not dedup)
+    same = [it for it in items if it.prompt_id == items[0].prompt_id]
+    assert len(same) >= 2
+    head = len(same[0].prompt) - cfg.tail_len
+    assert np.array_equal(same[0].prompt[:head], same[1].prompt[:head])
+    assert any(not np.array_equal(x.prompt[head:], same[0].prompt[head:])
+               for x in same[1:])
+
+
+def test_generate_validates_config():
+    with pytest.raises(ValueError):
+        generate(TraceConfig(n_requests=-1))
+    with pytest.raises(ValueError):
+        generate(TraceConfig(n_prompts=0))
+    with pytest.raises(ValueError):
+        generate(TraceConfig(arrival_rate=0.0))
+
+
+# -- replay against the engine ------------------------------------------------
+def _engine(pool_pages=24, slots=4, max_len=32, layout="pooled", **ecfg_kw):
+    from repro.serve import EngineConfig, ServeEngine
+    cfg = tiny_dense_cfg(vocab_size=64, kv_layout=layout, kv_page_slots=4,
+                         kv_pool_pages=pool_pages)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return ServeEngine(model, params,
+                       EngineConfig(slots=slots, max_len=max_len, **ecfg_kw))
+
+
+_REPLAY_CFG = TraceConfig(seed=11, n_requests=10, arrival_rate=0.4,
+                          n_prompts=4, prompt_len_short=4, prompt_len_long=8,
+                          out_len_short=2, out_len_long=4, vocab_size=64)
+
+
+def _replay(layout, pool_pages):
+    from repro.serve import Scheduler
+    engine = _engine(layout=layout, pool_pages=pool_pages, slots=2)
+    done = replay(generate(_REPLAY_CFG), Scheduler(engine))
+    stats = engine.shutdown()
+    return {r.uid: tuple(r.output) for r in done}, stats["telemetry"]
+
+
+def test_replay_queues_and_completes(rng):
+    out, tel = _replay("pooled", pool_pages=12)
+    assert tel["completed"] == _REPLAY_CFG.n_requests
+    assert set(out) == set(range(_REPLAY_CFG.n_requests))
+    # with 2 slots against a 0.4/step Poisson burst, somebody waited --
+    # the whole point of timed arrivals over submit-everything-up-front
+    assert tel["queue_wait_steps"]["max"] > 0
+    # idle ticks + decode ticks: the clock covers at least the last arrival
+    items = generate(_REPLAY_CFG)
+    assert tel["steps"] >= max(it.arrival_step for it in items)
+
+
+def test_replay_token_identity_across_layouts(rng):
+    """The trace replayed through the pooled (on-demand, preemptible) and
+    paged (reserved) layouts produces identical tokens per uid: load
+    generation changes WHEN work happens, never WHAT is computed."""
+    out_pooled, _ = _replay("pooled", pool_pages=12)
+    out_paged, _ = _replay("paged", pool_pages=None)
+    assert out_pooled == out_paged
+
+
+def test_replay_rejects_never_admissible_head():
+    from repro.serve import Request, Scheduler
+    engine = _engine(slots=1, max_len=16)
+    huge = TraceItem(uid=0, arrival_step=0, prompt=np.zeros(40, np.int32),
+                     max_new_tokens=1, prompt_id=0)
+    with pytest.raises(RuntimeError, match="never"):
+        replay([huge], Scheduler(engine))
+    engine.shutdown(abort=True)
