@@ -479,6 +479,48 @@ class BlockManager:
         self.dirty = True
         return True
 
+    def noop_run(self, seq: int, length: int, limit: int) -> int:
+        """How many consecutive decode steps, starting from ``length``,
+        are guaranteed BlockManager no-ops for ``seq`` -- pure query, no
+        state change.  Step ``n`` (0-based) writes position ``length + n``
+        and is a no-op iff :meth:`ensure_writable` on that position would
+        take none of its action branches (the page is mapped, not pending
+        prefetch-hit accounting, and not a shared page past the prefix --
+        so no allocation, no preemption risk, no copy-on-write, no counter)
+        AND the post-step :meth:`prefetch` hook at the new length would
+        decline trivially (not one-before-a-boundary with the next page
+        unmapped -- the allocate-or-decline decision is itself host-side
+        state).  The serving engine uses this to bound fused multi-step
+        decode runs: every step inside the returned run can execute on
+        device with no host-side frame management at all.
+
+        Under the reserved policy every page is statically mapped, never
+        shared and never prefetched, so the answer is always ``limit``.
+        """
+        if self.policy == "reserved":
+            return max(limit, 0)
+        ps = self.page_slots
+        shared = int(self.shared_len[seq])
+        n = 0
+        while n < limit:
+            pos = length + n
+            lp = pos // ps
+            if lp >= self.max_lpages:
+                break
+            f = int(self.block_table[seq, lp])
+            if f < 0:
+                break                    # growth would allocate (or preempt)
+            if (seq, lp) in self._prefetched:
+                break                    # first write settles hit accounting
+            if pos >= shared and self.allocator.is_shared(f):
+                break                    # first divergent write: COW
+            nl = pos + 1
+            if nl % ps == 0 and nl // ps < self.max_lpages \
+                    and int(self.block_table[seq, nl // ps]) < 0:
+                break                    # the step would run the prefetch
+            n += 1
+        return n
+
     # -- residency: preemption swap-out / resume swap-in ----------------------
     def _demote_candidates(self):
         """Host-resident pages in demotion-priority order: snapshots of

@@ -39,6 +39,10 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--paged", action="store_true",
                     help="use the emulated-memory paged KV layout")
+    ap.add_argument("--max-fused-steps", type=int, default=8,
+                    help="decode steps fused into one jitted while-loop "
+                         "run between control-plane events; 1 reproduces "
+                         "step-at-a-time dispatch exactly")
     ap.add_argument("--preempt-mode", choices=("swap", "recompute"),
                     default="swap",
                     help="how preempted sequences resume: swap-in of "
@@ -89,7 +93,8 @@ def main() -> None:
         slots=args.slots, max_len=args.max_len,
         preempt_mode=args.preempt_mode, retain_frames=args.retain_frames,
         host_frames=args.host_frames, spill_frames=args.spill_frames,
-        spill_path=args.spill_path))
+        spill_path=args.spill_path,
+        max_fused_steps=args.max_fused_steps))
     sched = Scheduler(engine, SchedulerConfig(window=args.sched_window,
                                               aging_steps=args.aging_steps))
     t0 = time.monotonic()

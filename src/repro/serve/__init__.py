@@ -1,4 +1,6 @@
 from repro.serve.engine import EngineConfig, Request, ServeEngine  # noqa: F401
+from repro.serve.fused_decode import (fused_decode_run,  # noqa: F401
+                                      sampled_decode_step)
 from repro.serve.scheduler import Scheduler, SchedulerConfig  # noqa: F401
 from repro.serve.telemetry import (RollingMonitor, StepClock,  # noqa: F401
                                    Telemetry, percentile)

@@ -53,6 +53,21 @@ The engine itself carries no residency branching: it calls ``evict_seq`` /
 the BlockManager decides on, via the :class:`repro.emem_vm.PageIO`
 callbacks bound at construction.
 
+**Fused multi-step decode.**  The steady-state token loop does not cross
+the host boundary once per step: before each ``step()`` the engine
+computes a *fused horizon* -- the largest run of decode steps that is
+provably free of control-plane events (no budget or ``max_len``
+completion, and per ``BlockManager.noop_run`` no frame growth,
+copy-on-write, prefetch decision or preemption risk for any active slot)
+-- and executes the whole run as one jitted ``lax.while_loop``
+(:func:`repro.serve.fused_decode.fused_decode_run`) with greedy argmax
+sampling in-kernel.  One ``int32[cap, B]`` token buffer crosses the host
+boundary per run, and the engine then replays the per-step bookkeeping
+(token attribution, ``StepClock`` time, budgets, completion checks)
+host-side from that buffer -- byte-for-byte what the stepwise path would
+have recorded.  ``EngineConfig.max_fused_steps=1`` reproduces
+step-at-a-time dispatch exactly.
+
 ``ServeEngine`` is a context manager: ``with ServeEngine(...) as eng:``
 guarantees the shutdown leak detector runs even when the body raises
 (active requests are aborted first so the original exception propagates).
@@ -101,12 +116,19 @@ class EngineConfig:
     #: sliding-window size of the rolling TTFT monitor
     #: (telemetry.RollingMonitor: median + spike/regression detection)
     telemetry_window: int = 32
+    #: upper bound on the decode steps fused into one jitted while-loop
+    #: run between control-plane events (module docstring); ``1``
+    #: reproduces step-at-a-time dispatch exactly
+    max_fused_steps: int = 8
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, ecfg: EngineConfig):
         if ecfg.preempt_mode not in ("swap", "recompute"):
             raise ValueError(f"unknown preempt_mode {ecfg.preempt_mode!r}")
+        if ecfg.max_fused_steps < 1:
+            raise ValueError(
+                f"max_fused_steps must be >= 1, got {ecfg.max_fused_steps}")
         self.model = model
         self.params = params
         self.ecfg = ecfg
@@ -114,9 +136,6 @@ class ServeEngine:
         self.lengths = jnp.zeros((ecfg.slots,), jnp.int32)
         self.slot_req: list[Request | None] = [None] * ecfg.slots
         self.budget = np.zeros(ecfg.slots, np.int64)
-        self._decode_jit = jax.jit(
-            lambda p, t, c, l, m: model.decode_step(p, t, c, l,
-                                                    write_mask=m))
         #: requests preempted since the last drain (scheduler requeues them)
         self.preempted: list[Request] = []
         #: requests completed since the last drain (scheduler accounts
@@ -138,8 +157,8 @@ class ServeEngine:
         self.metrics = Telemetry(monitor_window=ecfg.telemetry_window)
         self.counters = {"admitted": 0, "completed": 0, "preempted": 0,
                          "swapped": 0, "swap_resumed": 0, "aborted": 0,
-                         "decode_steps": 0, "shared_prompt_tokens": 0,
-                         "leaked_frames": 0}
+                         "decode_steps": 0, "dispatches": 0,
+                         "shared_prompt_tokens": 0, "leaked_frames": 0}
         cfg = model.cfg
         if cfg.kv_layout in ("paged", "pooled"):
             from repro.emem_vm import BlockManager, PageIO
@@ -200,7 +219,11 @@ class ServeEngine:
         return False
 
     def _decode(self, params, toks, cache, lengths, write_mask=None):
-        """One jitted decode, synced before returning.
+        """One jitted decode with greedy sampling in-jit, synced before
+        returning.  Returns ``(sampled, logits, cache)``: ``sampled`` is
+        the host-side ``int32[B]`` greedy argmax -- the only device value
+        the hot path transfers -- and ``logits`` stays on device (tests
+        and diagnostics may read it; the engine does not).
 
         ``write_mask`` limits which slots commit cache writes this step --
         decode runs the full batch, so without it a prefill would overwrite
@@ -209,20 +232,24 @@ class ServeEngine:
 
         The sync matters: XLA CPU async dispatch (observed on jax 0.4.37)
         corrupts results when executions of the same executable overlap, as
-        they do in the prefill loop which never reads ``logits`` between
-        tokens.  Blocking per step serializes the executions.  (Host-side
-        buffers are also always *copied* in with ``jnp.array`` --
-        ``jnp.asarray`` zero-copies numpy memory, racing later in-place
-        mutation of the same buffer.)
+        they do in the prefill loop which never reads its outputs between
+        tokens.  Materializing ``sampled`` blocks on the execution, which
+        serializes consecutive dispatches; a fused run is ONE dispatch, so
+        the same one-sync-per-dispatch rule costs it a single sync at loop
+        exit (see :meth:`_step_fused`).  (Host-side buffers are also always
+        *copied* in with ``jnp.array`` -- ``jnp.asarray`` zero-copies numpy
+        memory, racing later in-place mutation of the same buffer.)
         """
+        from repro.serve.fused_decode import sampled_decode_step
         if write_mask is None:
             write_mask = np.ones(self.ecfg.slots, bool)
-        logits, cache = self._decode_jit(params, toks, cache, lengths,
-                                         jnp.array(write_mask))
-        jax.block_until_ready(logits)
+        sampled, logits, cache = sampled_decode_step(
+            self.model, params, toks, cache, lengths, jnp.array(write_mask))
+        sampled = np.asarray(sampled)    # the one host transfer + sync
         self.counters["decode_steps"] += 1
+        self.counters["dispatches"] += 1
         self.metrics.clock.tick()
-        return logits, cache
+        return sampled, logits, cache
 
     # -- frame management (both paged layouts, via the BlockManager) ---------
     def _apply_frame_writes(self, assignments) -> None:
@@ -512,22 +539,33 @@ class ServeEngine:
         mask = np.zeros(self.ecfg.slots, bool)
         mask[slot] = True                # only this slot commits KV writes
         lengths = np.array(self.lengths)
+        # invariant allocations hoisted out of the prefill loop (prep for
+        # chunked prefill): the token batch is reused across steps, and the
+        # device lengths advance from a base with ``.at[slot].set`` instead
+        # of a full host->device rebuild per token.  jnp.array (copy=True),
+        # NOT jnp.asarray, for anything built from ``lengths``/``tok_batch``:
+        # asarray zero-copies the numpy buffer on CPU, and with async
+        # dispatch the in-flight decode would race the next iteration's
+        # in-place mutation
+        tok_batch = np.zeros((self.ecfg.slots, 1), np.int32)
+        base = jnp.array(lengths)
         for t in range(start, len(toks)):
             lengths[slot] = t + 1
-            # jnp.array (copy=True), NOT jnp.asarray: asarray zero-copies the
-            # numpy buffer on CPU, and with async dispatch the in-flight
-            # decode would race the next iteration's in-place mutation
-            self.lengths = jnp.array(lengths)
+            self.lengths = base.at[slot].set(t + 1)
+            n_pre = len(self.preempted)
             if not self._grow(slot, t + 1, lengths):
                 return          # preempted mid-prefill; requeued for retry
-            tok_batch = np.zeros((self.ecfg.slots, 1), np.int32)
+            if len(self.preempted) != n_pre:
+                # a growth preemption zeroed a victim's length host-side;
+                # refresh the device base to match
+                base = jnp.array(lengths)
             tok_batch[slot, 0] = toks[t]
             self._sync_vm()
-            logits, self.cache = self._decode(
+            sampled, _, self.cache = self._decode(
                 self.params, jnp.array(tok_batch), self.cache, self.lengths,
                 mask)
             self._kv_committed[slot] = t + 1
-        req._next = int(jnp.argmax(logits[slot, :self.model.cfg.vocab_size]))
+        req._next = int(sampled[slot])
         self.metrics.on_token(req, len(req.output))
         self.counters["admitted"] += 1
 
@@ -547,19 +585,114 @@ class ServeEngine:
             self.cache[key] = e
 
     # -- decode -------------------------------------------------------------
-    def step(self) -> None:
-        """One decode step for every active slot.
+    def _fused_horizon(self, order, lengths, max_steps: int | None) -> int:
+        """Largest run of decode steps from the current state that is
+        provably free of control-plane events, capped at
+        ``max_fused_steps`` (and ``max_steps``, the scheduler's external
+        bound -- e.g. steps until the next trace arrival).
 
-        Frame growth runs oldest-sequence-first so that on pool exhaustion
-        the youngest sequences are preempted while the oldest keep making
-        progress (guaranteeing liveness).  After growing, the next page
-        boundary each survivor will cross is prefetched (allocated one
-        token early) so the boundary step never waits on the allocator."""
+        Per active slot the run may not reach past its completion
+        (budget or ``max_len``: the completing step may BE the last run
+        step, since completion handling happens after the run) nor past
+        the first step whose KV write the BlockManager could not absorb
+        as a pure table lookup (``noop_run``: unmapped page -> growth /
+        possible preemption, shared page -> copy-on-write, prefetched
+        page -> first-write accounting, one-before-boundary -> prefetch
+        decision).  EOS cannot be bounded host-side -- the fused loop
+        itself exits on it."""
+        cap = self.ecfg.max_fused_steps
+        if max_steps is not None:
+            cap = min(cap, max_steps)
+        for i in order:
+            if cap <= 1:
+                return 1
+            cap = min(cap, int(self.budget[i]),
+                      self.ecfg.max_len - 1 - int(lengths[i]))
+            if self.blocks is not None and cap > 1:
+                cap = min(cap, self.blocks.noop_run(i, int(lengths[i]), cap))
+        return max(cap, 1)
+
+    def _step_fused(self, order, horizon: int) -> int:
+        """Run ``horizon`` decode steps (fewer on an EOS exit) as one
+        jitted while-loop dispatch, then replay the per-step bookkeeping
+        host-side from the sampled-token buffer -- byte-for-byte the
+        counters, timestamps, budgets and completion decisions the
+        stepwise path would have produced.  The horizon guarantees no
+        frame growth, prefetch, preemption or admission opportunity
+        occurs inside the run, so none of that code needs to run here."""
+        from repro.serve.fused_decode import fused_decode_run
+        active = np.zeros(self.ecfg.slots, bool)
+        toks = np.zeros((self.ecfg.slots, 1), np.int32)
+        lengths0 = np.array(self.lengths)
+        for i in order:
+            active[i] = True
+            toks[i, 0] = self.slot_req[i]._next
+        eos = -1 if self.ecfg.eos_id is None else int(self.ecfg.eos_id)
+        self._sync_vm()
+        buf, n_done, self.cache, self.lengths = fused_decode_run(
+            self.model, int(self.ecfg.max_fused_steps), self.params,
+            jnp.array(toks), self.cache, self.lengths, jnp.array(active),
+            jnp.int32(horizon), jnp.int32(eos))
+        buf = np.asarray(buf)            # the one host sync of the run
+        n = int(n_done)
+        self.counters["decode_steps"] += n
+        self.counters["dispatches"] += 1
+        c0 = self.metrics.clock.now()
+        self.metrics.clock.tick(n)
+        # token attribution: iteration k fed the pending ``_next`` (k == 0)
+        # or buf[k-1], and its decode (at clock c0 + k + 1) sampled buf[k]
+        for k in range(n):
+            for i in order:
+                req = self.slot_req[i]
+                req.output.append(int(toks[i, 0]) if k == 0
+                                  else int(buf[k - 1, i]))
+                self.metrics.on_token(req, len(req.output), at=c0 + k + 1)
+        for i in sorted(order):          # stepwise parity: slot-index order
+            req = self.slot_req[i]
+            new_len = int(lengths0[i]) + n
+            self._kv_committed[i] = new_len
+            req._next = int(buf[n - 1, i])
+            self.budget[i] -= n
+            hit_eos = (self.ecfg.eos_id is not None
+                       and req.output and req.output[-1] == self.ecfg.eos_id)
+            if self.budget[i] <= 0 or hit_eos or \
+                    new_len >= self.ecfg.max_len - 1:
+                req.done = True
+                self.slot_req[i] = None
+                self.counters["completed"] += 1
+                self.completed_reqs.append(req)
+                self.metrics.on_complete(req)
+                self._kv_committed[i] = 0
+                self._release(i)
+        return n
+
+    def step(self, max_steps: int | None = None) -> int:
+        """Advance every active slot by one decode step -- or, when the
+        fused horizon allows, by a whole jitted run of them.  Returns the
+        number of decode steps executed (0 when idle), so the scheduler
+        can age its queue in real decode steps.
+
+        ``max_steps`` bounds the fused run externally (the trace replayer
+        caps it at the next arrival so arrival timestamps are unchanged);
+        ``None`` leaves ``EngineConfig.max_fused_steps`` as the bound.
+
+        On the stepwise path, frame growth runs oldest-sequence-first so
+        that on pool exhaustion the youngest sequences are preempted while
+        the oldest keep making progress (guaranteeing liveness).  After
+        growing, the next page boundary each survivor will cross is
+        prefetched (allocated one token early) so the boundary step never
+        waits on the allocator.  A fused run never contains any of those
+        events -- that is what makes it safe to fuse (see
+        :meth:`_fused_horizon`)."""
         order = sorted((i for i, r in enumerate(self.slot_req)
                         if r is not None),
                        key=lambda s: self._admit_seq[s])
         if not order:
-            return
+            return 0
+        horizon = self._fused_horizon(order, np.asarray(self.lengths),
+                                      max_steps)
+        if horizon > 1:
+            return self._step_fused(order, horizon)
         toks = np.zeros((self.ecfg.slots, 1), np.int32)
         lengths = np.array(self.lengths)
         for i in order:
@@ -575,17 +708,16 @@ class ServeEngine:
         self.lengths = jnp.array(lengths)
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
-            return
+            return 0
         mask = np.zeros(self.ecfg.slots, bool)
         mask[active] = True
         self._sync_vm()
-        logits, self.cache = self._decode(
+        sampled, _, self.cache = self._decode(
             self.params, jnp.array(toks), self.cache, self.lengths, mask)
         for i in active:
             self._kv_committed[i] = int(lengths[i])
             req = self.slot_req[i]
-            req._next = int(jnp.argmax(
-                logits[i, :self.model.cfg.vocab_size]))
+            req._next = int(sampled[i])
             self.metrics.on_token(req, len(req.output))
             self.budget[i] -= 1
             hit_eos = (self.ecfg.eos_id is not None
@@ -599,3 +731,4 @@ class ServeEngine:
                 self.metrics.on_complete(req)
                 self._kv_committed[i] = 0
                 self._release(i)
+        return 1

@@ -1,0 +1,116 @@
+"""Jitted multi-step decode: the token loop as a single ``lax.while_loop``.
+
+The serving engine's hot path used to be dispatch-bound: every decode step
+paid a Python round trip (build the token batch, dispatch one jitted step,
+sync, ``jnp.argmax`` per active slot) before the next step could start.
+This module moves the whole steady-state inner loop onto the device:
+
+* :func:`sampled_decode_step` -- one decode step with greedy argmax
+  *inside* the jit, so a single ``int32[B]`` sampled-token vector crosses
+  the host boundary instead of one ``jnp.argmax`` device sync per slot.
+  This is the building block of the non-fused path too.
+
+* :func:`fused_decode_run` -- up to ``n_steps`` decode steps fused into
+  one ``lax.while_loop`` whose carried state is ``(iteration, fed tokens,
+  cache, lengths, sampled-token buffer, stop flag)``.  Each iteration
+  advances ``lengths`` for the active slots, runs the model's decode step
+  (write-masked to the active slots), greedily samples the next token into
+  a ``[cap, B]`` buffer, and feeds it back.  The loop exits early when an
+  active slot was *fed* ``eos_id`` -- the same condition the stepwise
+  engine checks on ``req.output[-1]`` after a step.
+
+The caller is responsible for making the run control-plane free: the
+engine computes a *fused horizon* from the per-slot budgets, ``max_len``
+and the BlockManager's block tables (``BlockManager.noop_run``) before
+launch, so no iteration inside the run could have needed frame growth,
+copy-on-write, prefetch, preemption, admission, or completion handling.
+Those all stay in host Python, byte-for-byte where they were, at the run
+boundaries.  Budget and ``max_len`` exhaustion therefore never need an
+in-loop check -- they are folded into ``n_steps`` -- and only EOS, which
+depends on sampled tokens the host has not seen, exits the loop from
+inside.
+
+Both entry points are module-level jits with the :class:`Model` facade as
+a static argument (a frozen dataclass, hashable by config value), so every
+engine in a process sharing a model configuration shares one compiled
+executable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def sampled_decode_step(model, params, tokens, cache, lengths, write_mask):
+    """One decode step with greedy sampling in-jit.
+
+    Returns ``(sampled, logits, cache)`` where ``sampled`` is the
+    ``int32[B]`` greedy argmax over the real (unpadded) vocabulary --
+    the only output the engine's hot path transfers to the host.  The
+    full logits ride along untransferred for callers that want them
+    (tests, diagnostics); XLA has already materialized them.
+    """
+    logits, cache = model.decode_step(params, tokens, cache, lengths,
+                                      write_mask=write_mask)
+    sampled = jnp.argmax(logits[:, :model.cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)
+    return sampled, logits, cache
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def fused_decode_run(model, cap, params, tokens, cache, lengths, active,
+                     n_steps, eos_id):
+    """Run up to ``n_steps`` decode steps in one jitted while-loop.
+
+    Args:
+      model: the :class:`Model` facade (static: compiled per config).
+      cap: static upper bound on ``n_steps`` -- sizes the sampled-token
+        buffer (``EngineConfig.max_fused_steps``); keeping it static while
+        ``n_steps`` is traced means one executable serves every horizon.
+      params: model parameters.
+      tokens: ``int32[B, 1]`` -- the token each active slot feeds first
+        (the engine's pending ``req._next``); inactive rows are 0.
+      cache: the KV cache pytree (paged tables in ``cache["vm"]`` ride as
+        loop-invariant carried state).
+      lengths: ``int32[B]`` current sequence lengths.
+      active: ``bool[B]`` -- which slots decode; doubles as the write
+        mask, exactly as the stepwise path masks its decode.
+      n_steps: traced iteration bound (the engine's fused horizon).
+      eos_id: traced int32 EOS token (-1 when the engine has none: no
+        token matches, so the loop never EOS-exits).
+
+    Returns ``(buf, n_done, cache, lengths)``: the ``int32[cap, B]``
+    sampled-token buffer (row k = tokens sampled by iteration k), the
+    number of iterations actually run, and the advanced cache/lengths.
+    Iteration k feeds ``tokens`` (k == 0) or ``buf[k-1]`` and samples
+    ``buf[k]``; the host replays exactly this recurrence to attribute
+    tokens to requests and timestamps.
+    """
+    inc = active.astype(lengths.dtype)
+    buf0 = jnp.zeros((cap, tokens.shape[0]), jnp.int32)
+
+    def cond(carry):
+        k, _, _, _, _, stop = carry
+        return jnp.logical_and(k < n_steps, jnp.logical_not(stop))
+
+    def body(carry):
+        k, toks, cache, lens, buf, _ = carry
+        lens = lens + inc
+        logits, cache = model.decode_step(params, toks, cache, lens,
+                                          write_mask=active)
+        sampled = jnp.argmax(logits[:, :model.cfg.vocab_size],
+                             axis=-1).astype(jnp.int32)
+        buf = buf.at[k].set(sampled)
+        # the stepwise engine completes a slot whose *appended* (fed)
+        # token is EOS; stop after the iteration that fed one
+        stop = jnp.any(jnp.logical_and(active, toks[:, 0] == eos_id))
+        toks = jnp.where(active[:, None], sampled[:, None], toks)
+        return (k + 1, toks, cache, lens, buf, stop)
+
+    k, _, cache, lengths, buf, _ = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(0), tokens, cache, lengths, buf0, jnp.bool_(False)))
+    return buf, k, cache, lengths

@@ -139,7 +139,7 @@ class Scheduler:
                 best, best_score = i, score
         return best
 
-    def _admit_waiting(self) -> None:
+    def _admit_waiting(self) -> set[int]:
         """Admit until no slot, no admissible candidate, or queue empty.
 
         Free slots are re-queried every iteration: an admission that
@@ -147,7 +147,10 @@ class Scheduler:
         mid-pass, and those must be fillable now, not a decode step later.
         A request that was preempted during this pass is not retried until
         the next pass (its admission just failed; retrying in a loop with
-        unchanged headroom would spin)."""
+        unchanged headroom would spin).  Returns the ids of those
+        passed-over preemptees: their admissibility was never re-evaluated
+        after their eviction, so the caller must not fuse past the next
+        step while one could be waiting on a free slot."""
         tried: set[int] = set()
         while self.queue:
             slots = self.engine.free_slots()
@@ -164,6 +167,7 @@ class Scheduler:
                 tried.add(id(p))
                 self.queue.appendleft(p)
             self._drain_completed()   # an admission may preempt-complete
+        return tried
 
     def _requeue_preempted(self) -> None:
         # the engine preempts youngest-first; appendleft in that order
@@ -181,21 +185,33 @@ class Scheduler:
                 self._completed_ids.add(id(req))
                 self.completed.append(req)
 
-    def tick(self) -> bool:
-        """One scheduler loop iteration: admit, decode one step, requeue
-        preemptions, account completions, age the queue.  Returns whether
+    def tick(self, max_steps: int | None = None) -> bool:
+        """One scheduler loop iteration: admit, decode (one step, or one
+        fused run of them), requeue preemptions, account completions, age
+        the queue by the decode steps that actually ran.  Returns whether
         any slot was active after admission -- False means the engine made
         no progress this tick (idle, or an inadmissible queue head against
         an empty engine).  ``run`` loops this until drained; the trace
         replayer (:func:`repro.serve.tracegen.replay`) interleaves it with
-        timed arrivals so requests genuinely queue."""
-        self._admit_waiting()
+        timed arrivals, passing ``max_steps`` so a fused run never decodes
+        past the next arrival.
+
+        When the admission pass ended with a request it preempted mid-pass
+        still waiting against a free slot, the tick is forced stepwise:
+        that request's admissibility was never re-checked after its own
+        eviction freed frames, and the stepwise schedule would retry it on
+        the very next tick -- fusing past that retry would change
+        admission timing."""
+        tried = self._admit_waiting()
         active = any(r is not None for r in self.engine.slot_req)
-        self.engine.step()
+        if tried and self.queue and self.engine.free_slots():
+            max_steps = 1
+        n = self.engine.step(max_steps)
         self._requeue_preempted()
         self._drain_completed()
+        age = n if n > 0 else 1
         for req in self.queue:
-            self._age[id(req)] = self._age.get(id(req), 0) + 1
+            self._age[id(req)] = self._age.get(id(req), 0) + age
         return active
 
     def run(self, max_steps: int = 10_000) -> list[Request]:

@@ -6,13 +6,15 @@ a deployment actually buys: time-to-first-token (TTFT) and inter-token
 latency (ITL) under load -- not just aggregate swap/share counters.  This
 module provides the three pieces:
 
-* :class:`StepClock` -- decode-step-denominated time.  Every jitted decode
-  (prefill token or batched decode step) ticks the clock once, and idle
+* :class:`StepClock` -- decode-step-denominated time.  Every decode step
+  (prefill token or batched decode step) ticks the clock once -- a fused
+  multi-step run ticks ``tick(n)`` for its n steps in one call -- and idle
   waits between trace arrivals tick it explicitly, so every latency number
   is an exact integer count of decode steps: deterministic across reruns,
-  platforms and mesh sizes, and directly comparable to the decode-step cost
-  accounting the swap/spill workloads already use.  Wall-clock time would
-  measure the host Python overhead of this toy-scale model, not the policy.
+  platforms, mesh sizes and fused-run lengths, and directly comparable to
+  the decode-step cost accounting the swap/spill workloads already use.
+  Wall-clock time would measure the host Python overhead of this
+  toy-scale model, not the policy.
 
 * :class:`RequestTrace` / :class:`Telemetry` -- per-request lifecycle
   tracing: arrival -> first admission -> first token -> completion, with
@@ -211,14 +213,21 @@ class Telemetry:
         tr.swap_in_pages += swap_in_pages
         tr.spill_in_pages += spill_in_pages
 
-    def on_token(self, req, index: int) -> None:
+    def on_token(self, req, index: int, at: int | None = None) -> None:
         """Generated token ``index`` was produced this step.  Re-production
         of an already-produced index (a recompute replay) keeps the first
         timestamp: the token could have been streamed then, and the replay
-        cost lands in the following tokens' gaps."""
+        cost lands in the following tokens' gaps.
+
+        ``at`` backdates the production step: a fused multi-step decode
+        run ticks the clock once for the whole run, then attributes each
+        token to the step inside the run that actually computed its
+        logits (run start + iteration + 1) -- the same integer the
+        stepwise path would have recorded."""
         tr = self._trace(req)
         if index == len(tr.token_steps):
-            tr.token_steps.append(self.clock.now())
+            tr.token_steps.append(self.clock.now() if at is None
+                                  else int(at))
             if index == 0:
                 self.monitor.push(tr.ttft)
 

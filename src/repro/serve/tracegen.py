@@ -140,7 +140,12 @@ def replay(items: list[TraceItem], sched: Scheduler,
             item = pending.popleft()
             sched.submit([Request(uid=item.uid, prompt=item.prompt,
                                   max_new_tokens=item.max_new_tokens)])
-        if not sched.tick():
+        # a fused decode run may not pass the next arrival: the request
+        # must be submitted at exactly the step it would have been under
+        # stepwise replay (arrival timestamps are part of trace identity)
+        cap = (max(1, int(pending[0].arrival_step) - clock.now())
+               if pending else None)
+        if not sched.tick(max_steps=cap):
             if sched.queue:
                 raise RuntimeError(
                     f"request uid={sched.queue[0].uid} can never be "

@@ -162,7 +162,7 @@ def test_serve_engine_matches_manual_decode(rng):
     req = Request(uid=0, prompt=prompt, max_new_tokens=3)
     engine.admit(req, 0)
     # after admit, the engine's last logits determined req._next
-    eng_logits, _ = engine._decode(
+    _, eng_logits, _ = engine._decode(
         engine.params,
         jnp.asarray([[prompt[-1]]], jnp.int32).repeat(1, 0),
         engine.cache, engine.lengths)  # re-decode of last token is a no-op
@@ -615,7 +615,11 @@ def test_preempt_after_final_token_completes(rng):
     cfg = _pooled_cfg(pool_pages=16)
     model = Model(cfg)
     params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, EngineConfig(slots=2, max_len=32))
+    # stepwise: the test forges a preemption between two exact single
+    # steps, so a fused run must not complete the request first
+    engine = ServeEngine(model, params,
+                         EngineConfig(slots=2, max_len=32,
+                                      max_fused_steps=1))
     req = Request(uid=0, prompt=rng.integers(0, 64, 5).astype(np.int32),
                   max_new_tokens=3)
     engine.admit(req, 0)

@@ -303,7 +303,9 @@ def test_completion_during_admission_preemption_is_accounted(rng):
     implementation collected completions from a before-step snapshot of
     ``slot_req`` and lost exactly this case.)"""
     from repro.serve import Request, Scheduler
-    engine = _engine(pool_pages=16, slots=2)
+    # stepwise: the test forges a mid-step preemption between two exact
+    # single steps, so a fused run must not complete the request early
+    engine = _engine(pool_pages=16, slots=2, max_fused_steps=1)
     sched = Scheduler(engine)
     req = Request(uid=0, prompt=rng.integers(0, 64, 5).astype(np.int32),
                   max_new_tokens=3)

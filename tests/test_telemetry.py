@@ -75,6 +75,28 @@ def test_on_token_first_production_wins():
     assert req._trace.token_steps == [3, 13]
 
 
+def test_on_token_explicit_timestamp():
+    """A fused run of n steps ticks the clock once (tick(n)) and then
+    attributes token k of the run to c0 + k + 1 via the ``at=`` override
+    -- the timestamps a stepwise replay would have recorded.  First
+    production still wins over replays."""
+    tel = Telemetry()
+
+    class Req:
+        uid = 0
+        output = []
+    req = Req()
+    c0 = tel.clock.now()
+    tel.clock.tick(4)                          # one fused run, 4 steps
+    for k in range(4):
+        tel.on_token(req, k, at=c0 + k + 1)
+    assert req._trace.token_steps == [1, 2, 3, 4]
+    tel.on_token(req, 2, at=99)                # replayed index: ignored
+    assert req._trace.token_steps == [1, 2, 3, 4]
+    tel.on_token(req, 4)                       # no at=: clock.now()
+    assert req._trace.token_steps == [1, 2, 3, 4, 4]
+
+
 def test_on_complete_truncates_speculative_token():
     """The completing decode computes one speculative next token that is
     never appended to the output; its timestamp must not pollute ITL."""
