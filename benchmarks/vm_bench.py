@@ -718,11 +718,27 @@ def _dispatch_rows(record: dict, smoke: bool = False) -> list[dict]:
 
 
 # ---------------------------------------------------------------------------
+# Fused-kernel sweep (kernel_bench's paged_decode oracle comparison)
+# ---------------------------------------------------------------------------
+def _paged_decode_rows(record: dict, smoke: bool = False) -> list[dict]:
+    """Fused VM-walking Pallas decode step vs its composed-ops oracle,
+    measured by ``benchmarks.kernel_bench.paged_decode_sweep`` (which
+    also asserts the two impls agree).  One geometry for smoke and full
+    runs, like the serving workloads, so the smoke gate compares like
+    with like."""
+    from benchmarks.kernel_bench import paged_decode_sweep
+
+    rows_, rec = paged_decode_sweep()
+    record["paged_decode"] = rec
+    return rows_
+
+
+# ---------------------------------------------------------------------------
 # BENCH_vm.json bookkeeping: meta stamps, history, regression gate
 # ---------------------------------------------------------------------------
 #: sections re-measured identically by smoke runs (mergeable + gateable)
 _SERVING_SECTIONS = ("prefix_sharing", "swap", "tiered", "retention",
-                     "scheduling", "slo", "dispatch")
+                     "scheduling", "slo", "dispatch", "paged_decode")
 #: headline metrics per section for history and the regression gate:
 #: tuples of (metric key, lower_is_better) -- throughput/ratio metrics are
 #: higher-is-better, the SLO latency metrics are lower-is-better
@@ -739,6 +755,11 @@ _HEADLINES = {
     # functions of the seeded trace, so this number is exact across
     # machines and reruns)
     "dispatch": (("transitions_per_token_fused", True),),
+    # same precedent: the fused-vs-composed tokens/s from the kernel
+    # sweep are recorded but ungated (off TPU the fused impl runs in
+    # interpret mode -- a correctness path); the gated headline is the
+    # deterministic per-step read-set ratio the table walk buys
+    "paged_decode": (("page_read_ratio", False),),
 }
 _HISTORY_LIMIT = 50
 
@@ -871,7 +892,8 @@ def collect(smoke: bool = False) -> tuple[list[dict], dict]:
            + _prefix_rows(record, smoke) + _swap_rows(record, smoke)
            + _tiered_rows(record, smoke) + _retention_rows(record, smoke)
            + _sched_rows(record, smoke) + _slo_rows(record, smoke)
-           + _dispatch_rows(record, smoke))
+           + _dispatch_rows(record, smoke)
+           + _paged_decode_rows(record, smoke))
     return out, record
 
 

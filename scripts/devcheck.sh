@@ -14,10 +14,11 @@ python -m pytest -x -q "$@"
 # allocator/engine/residency regressions crash it, slowdowns fail the
 # 30 s gate.  --gate additionally compares the smoke run's headline
 # numbers (shared-prefix concurrency, swap decode-step savings, retention
-# hit rate, scheduling tokens/step, and -- lower-is-better -- the slo
+# hit rate, scheduling tokens/step, the fused-decode dispatch count and
+# paged_decode page-read ratio, and -- lower-is-better -- the slo
 # workload's p99 TTFT + mean ITL in decode steps) against the committed
 # BENCH_vm.json baseline and fails on a >15% regression, so the
-# scheduling/residency/latency gains cannot silently rot.
+# scheduling/residency/latency/fusion gains cannot silently rot.
 SMOKE_BUDGET_S=30
 start=$(date +%s)
 python -m benchmarks.vm_bench --smoke --gate

@@ -32,6 +32,7 @@ from repro.emem_vm.allocator import (FrameAllocator, OutOfFrames,  # noqa: F401
                                      RES_SPILL)
 from repro.emem_vm.block_manager import (AdmissionCost, BlockManager,  # noqa: F401
                                          CowCopy, PageIO)
+from repro.emem_vm.layout import frame_rows, shard_frames  # noqa: F401
 from repro.emem_vm.spill import SpillStore  # noqa: F401
 from repro.emem_vm.cache import CacheSpec, HotPageCache  # noqa: F401
 from repro.emem_vm.page_table import PROT_NONE, PROT_R, PROT_RW, PROT_W  # noqa: F401

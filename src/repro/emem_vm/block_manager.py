@@ -115,6 +115,50 @@ class CowCopy:
     dst: int
 
 
+@dataclasses.dataclass(frozen=True)
+class StagedPrefetch:
+    """A prefetch frame pre-staged for a fused multi-step decode run.
+
+    The allocator side effects (alloc + pin) happen at staging time so the
+    headroom gate sees exactly the state it would have seen stepwise; the
+    table mapping and counters are deferred to :meth:`BlockManager.
+    commit_fused_run`, which replays them against the number of steps the
+    device loop actually executed."""
+    seq: int
+    lpage: int
+    frame: int
+    #: 0-based fused step whose post-step prefetch hook staged this frame
+    k_alloc: int
+
+    @property
+    def k_hit(self) -> int:
+        """Step whose boundary write first lands in the staged page."""
+        return self.k_alloc + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PendingHit:
+    """A pre-run prefetched page whose hit accounting settles at fused step
+    ``k_hit`` (the first write into it during the run)."""
+    seq: int
+    lpage: int
+    k_hit: int
+
+
+@dataclasses.dataclass
+class FusedRunPlan:
+    """Host-side plan for one fused decode run: ``n`` steps are guaranteed
+    free of *unplanned* host-side frame management, ``allocs`` are the
+    prefetches staged inside the run (frames already allocated + pinned),
+    ``hits`` the pre-run prefetched pages whose first write falls inside
+    it.  Settle with :meth:`BlockManager.commit_fused_run` (passing the
+    step count the device loop really executed) or :meth:`BlockManager.
+    cancel_fused_run`."""
+    n: int
+    allocs: list[StagedPrefetch]
+    hits: list[PendingHit]
+
+
 @dataclasses.dataclass
 class PageIO:
     """Engine-provided callbacks that move page contents across the tiers.
@@ -479,47 +523,161 @@ class BlockManager:
         self.dirty = True
         return True
 
-    def noop_run(self, seq: int, length: int, limit: int) -> int:
-        """How many consecutive decode steps, starting from ``length``,
-        are guaranteed BlockManager no-ops for ``seq`` -- pure query, no
-        state change.  Step ``n`` (0-based) writes position ``length + n``
-        and is a no-op iff :meth:`ensure_writable` on that position would
-        take none of its action branches (the page is mapped, not pending
-        prefetch-hit accounting, and not a shared page past the prefix --
-        so no allocation, no preemption risk, no copy-on-write, no counter)
-        AND the post-step :meth:`prefetch` hook at the new length would
-        decline trivially (not one-before-a-boundary with the next page
-        unmapped -- the allocate-or-decline decision is itself host-side
-        state).  The serving engine uses this to bound fused multi-step
-        decode runs: every step inside the returned run can execute on
-        device with no host-side frame management at all.
+    def stage_fused_run(self, seqs: Sequence[int], lengths: Sequence[int],
+                        limit: int) -> FusedRunPlan:
+        """Plan a fused multi-step decode run for the slots ``seqs``
+        (current lengths ``lengths``), simulating the stepwise host loop
+        k-major / slot-minor -- exactly the event order the engine's
+        per-step path would produce -- and PRE-STAGING the prefetch
+        allocations that loop would have made, so page boundaries no longer
+        end the run.
+
+        Step ``k`` (0-based) writes position ``lengths[i] + k`` of every
+        slot.  The run ends before the first step whose write would need
+        host action that cannot be staged: an unmapped (and unstaged) page
+        -- a prior prefetch declined, so growth must allocate or preempt --
+        a first divergent write to a shared page (copy-on-write), or the
+        table running out of logical pages.  A boundary whose prefetch the
+        stepwise loop would have *granted* is staged instead (allocator
+        alloc + pin happen NOW, so the headroom gate and free-list order
+        are byte-identical to stepwise; the table mapping and all counters
+        are deferred); one it would have *declined* ends the run exactly
+        where stepwise growth would have faulted.
+
+        The caller owns the returned plan: after the device loop reports
+        how many steps actually executed, :meth:`commit_fused_run` replays
+        mappings + counters for the reached stagings and silently returns
+        the unreached frames; :meth:`cancel_fused_run` returns all of them
+        (allocator state is restored exactly -- LIFO free list, reverse
+        undo order).
 
         Under the reserved policy every page is statically mapped, never
-        shared and never prefetched, so the answer is always ``limit``.
+        shared and never prefetched, so the plan is ``limit`` steps with
+        nothing staged.
         """
+        limit = max(int(limit), 0)
         if self.policy == "reserved":
-            return max(limit, 0)
+            return FusedRunPlan(n=limit, allocs=[], hits=[])
         ps = self.page_slots
-        shared = int(self.shared_len[seq])
+        seq_set = set(int(s) for s in seqs)
+        pending = {(s, lp) for (s, lp) in self._prefetched if s in seq_set}
+        staged: dict[tuple[int, int], int] = {}
+        allocs: list[StagedPrefetch] = []
+        hits: list[PendingHit] = []
+        shared = {int(s): int(self.shared_len[int(s)]) for s in seqs}
+        starts = [(int(s), int(L)) for s, L in zip(seqs, lengths)]
         n = 0
         while n < limit:
-            pos = length + n
-            lp = pos // ps
-            if lp >= self.max_lpages:
+            k = n
+            # write phase of step k, slots in engine step order
+            broke = False
+            for s, L0 in starts:
+                pos = L0 + k
+                lp = pos // ps
+                if lp >= self.max_lpages:
+                    broke = True
+                    break
+                key = (s, lp)
+                if key not in staged:
+                    f = int(self.block_table[s, lp])
+                    if f < 0:
+                        broke = True     # growth would allocate (or preempt)
+                        break
+                    if pos >= shared[s] and self.allocator.is_shared(f):
+                        broke = True     # first divergent write: COW
+                        break
+                if key in pending:       # first write settles hit accounting
+                    hits.append(PendingHit(seq=s, lpage=lp, k_hit=k))
+                    pending.discard(key)
+            if broke:
                 break
-            f = int(self.block_table[seq, lp])
-            if f < 0:
-                break                    # growth would allocate (or preempt)
-            if (seq, lp) in self._prefetched:
-                break                    # first write settles hit accounting
-            if pos >= shared and self.allocator.is_shared(f):
-                break                    # first divergent write: COW
-            nl = pos + 1
-            if nl % ps == 0 and nl // ps < self.max_lpages \
-                    and int(self.block_table[seq, nl // ps]) < 0:
-                break                    # the step would run the prefetch
-            n += 1
-        return n
+            n = k + 1
+            # post-step prefetch hooks of step k, same slot order
+            declined = False
+            for s, L0 in starts:
+                nl = L0 + k + 1          # position the NEXT token writes
+                if nl % ps or nl >= self.max_lpages * ps:
+                    continue
+                lp = nl // ps
+                if (s, lp) in staged or int(self.block_table[s, lp]) >= 0:
+                    continue
+                live = int((self.block_table >= 0).any(axis=1).sum())
+                if self.allocator.free_count() <= live:
+                    declined = True      # stepwise would decline too; the
+                    continue             # write at k+1 then faults: run ends
+                try:
+                    nf = self.allocator.alloc()   # no reclaim: speculative
+                except OutOfFrames:
+                    declined = True
+                    continue
+                self.allocator.pin(nf)
+                staged[(s, lp)] = nf
+                allocs.append(StagedPrefetch(seq=s, lpage=lp, frame=nf,
+                                             k_alloc=k))
+            if declined:
+                break
+        return FusedRunPlan(n=n, allocs=allocs, hits=hits)
+
+    def commit_fused_run(self, plan: FusedRunPlan, n_done: int) -> None:
+        """Settle a staged plan after the device loop executed ``n_done``
+        steps: replay table mappings and prefetch counters for everything
+        the run actually reached, byte-identically to what the stepwise
+        loop would have recorded, and silently return unreached frames.
+
+        A staged frame whose allocating step ran (``k_alloc < n_done``)
+        exists exactly as a stepwise prefetch would: allocs/prefetch_allocs
+        count it, the block table maps it, and -- if its first write also
+        ran -- prefetch_hits settles immediately; otherwise it stays in the
+        pending-prefetch set for a later :meth:`ensure_writable` to claim.
+        Pre-run pending pages written inside the run settle their hits the
+        same way.  Frames whose allocating step never ran are returned with
+        no counter traffic (stepwise would never have allocated them)."""
+        if self.policy == "reserved":
+            return
+        n_done = int(n_done)
+        undo = []
+        for st in plan.allocs:
+            if st.k_alloc >= n_done:
+                undo.append(st)
+                continue
+            self.counters["allocs"] += 1
+            self.counters["prefetch_allocs"] += 1
+            self.block_table[st.seq, st.lpage] = st.frame
+            self.frame_lpage[st.frame] = st.lpage
+            if st.k_hit < n_done:
+                self.counters["prefetch_hits"] += 1
+            else:
+                self._prefetched.add((st.seq, st.lpage))
+            self.dirty = True
+        for h in plan.hits:
+            if h.k_hit < n_done:
+                self._prefetched.discard((h.seq, h.lpage))
+                self.counters["prefetch_hits"] += 1
+        for st in reversed(undo):
+            self.allocator.unpin(st.frame)
+            self.allocator.deref(st.frame)
+
+    def cancel_fused_run(self, plan: FusedRunPlan) -> None:
+        """Return every staged frame of an abandoned plan.  Reverse order
+        against the LIFO free list, so allocator state -- including the
+        order future allocations pop frames -- is exactly as if the plan
+        had never been staged."""
+        for st in reversed(plan.allocs):
+            self.allocator.unpin(st.frame)
+            self.allocator.deref(st.frame)
+
+    def noop_run(self, seq: int, length: int, limit: int) -> int:
+        """How many consecutive decode steps, starting from ``length``,
+        the fused path can run for ``seq`` without unplanned host-side
+        frame management -- pure query: stages a single-slot plan and
+        immediately cancels it, restoring allocator state exactly.  Since
+        the staging refactor a grantable boundary prefetch no longer ends
+        the run (it would be staged), so the answer counts through page
+        boundaries; unmapped-after-declined-prefetch, COW, and
+        end-of-table still bound it."""
+        plan = self.stage_fused_run([seq], [length], limit)
+        self.cancel_fused_run(plan)
+        return plan.n
 
     # -- residency: preemption swap-out / resume swap-in ----------------------
     def _demote_candidates(self):

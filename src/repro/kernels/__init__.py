@@ -1,7 +1,12 @@
 """Pallas TPU kernels (validated in interpret mode on CPU).
 
-emem_gather      -- paged gather/scatter: the emulated-memory DMA hot loop
+paged_decode     -- the paged-decode subsystem: fused VM-walking
+                    write + gather-attend kernels with a composed-ops
+                    oracle, plus the gather/scatter and flash-decode
+                    primitives they grew out of
 flash_attention  -- GQA flash attention (causal, sliding window)
-decode_attention -- flash-decode over a (paged/sharded) KV cache
 mamba2_ssd       -- chunked state-space-duality scan
+
+``emem_gather`` and ``decode_attention`` are import shims onto
+``paged_decode`` (gather*.py / flash*.py).
 """

@@ -1,4 +1,11 @@
-from repro.kernels.decode_attention.ops import (  # noqa: F401
+"""Import shim: the flash-decode kernel moved into
+``repro.kernels.paged_decode`` (flash*.py).  Kept so existing
+``from repro.kernels.decode_attention import ...`` call sites and the
+``kernel``/``ref``/``ops`` submodule names keep working."""
+from repro.kernels.paged_decode import flash as kernel  # noqa: F401
+from repro.kernels.paged_decode import flash_ops as ops  # noqa: F401
+from repro.kernels.paged_decode import flash_ref as ref  # noqa: F401
+from repro.kernels.paged_decode.flash_ops import (  # noqa: F401
     decode_attention,
     decode_attention_partial,
     merge_partials,

@@ -1,1 +1,12 @@
-from repro.kernels.emem_gather.ops import gather_pages, gather_slots, scatter_slots  # noqa: F401
+"""Import shim: the paged gather/scatter kernels moved into
+``repro.kernels.paged_decode`` (gather*.py).  Kept so existing
+``from repro.kernels.emem_gather import ...`` call sites and the
+``kernel``/``ref``/``ops`` submodule names keep working."""
+from repro.kernels.paged_decode import gather as kernel  # noqa: F401
+from repro.kernels.paged_decode import gather_ops as ops  # noqa: F401
+from repro.kernels.paged_decode import gather_ref as ref  # noqa: F401
+from repro.kernels.paged_decode.gather_ops import (  # noqa: F401
+    gather_pages,
+    gather_slots,
+    scatter_slots,
+)

@@ -1,0 +1,29 @@
+"""Paged-decode kernel subsystem: everything that reads or writes the
+emulated-memory KV page pool during decode.
+
+Fused VM-walking path (the paper's translation-rides-the-access point):
+  kernel.py      -- ``paged_kv_write`` + ``paged_gather_attend`` Pallas
+                    kernels that walk ``cache["vm"]`` block tables in-grid
+  ref.py         -- composed-ops oracle (host-side owner masks), also the
+                    CPU tier-1 impl
+  ops.py         -- per-shard entry + impl selection (``resolve_impl``)
+
+Primitive building blocks (formerly ``kernels/emem_gather`` and
+``kernels/decode_attention``; those packages remain as import shims):
+  gather*.py     -- paged gather/scatter: the emulated-memory DMA hot loop
+  flash*.py      -- flash-decode over a dense per-sequence KV cache
+"""
+from repro.kernels.paged_decode.flash_ops import (  # noqa: F401
+    decode_attention,
+    decode_attention_partial,
+    merge_partials,
+)
+from repro.kernels.paged_decode.gather_ops import (  # noqa: F401
+    gather_pages,
+    gather_slots,
+    scatter_slots,
+)
+from repro.kernels.paged_decode.ops import (  # noqa: F401
+    paged_decode_shard,
+    resolve_impl,
+)

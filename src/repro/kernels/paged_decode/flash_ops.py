@@ -6,8 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention import kernel as _k
-from repro.kernels.decode_attention import ref as _ref
+from repro.kernels.paged_decode import flash as _k
+from repro.kernels.paged_decode import flash_ref as _ref
 
 
 def _on_tpu() -> bool:

@@ -10,8 +10,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.emem_gather import kernel as _k
-from repro.kernels.emem_gather import ref as _ref
+from repro.kernels.paged_decode import gather as _k
+from repro.kernels.paged_decode import gather_ref as _ref
 
 LANE = 128
 

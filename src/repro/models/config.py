@@ -86,6 +86,13 @@ class ModelConfig:
     #:             admission (decouples the decode batch width from the KV
     #:             memory reservation).
     kv_layout: str = "batch"
+    #: Paged-decode impl for the paged/pooled layouts (and the batch layout's
+    #: pooled-store callers): "auto" -- fused VM-walking Pallas kernels on
+    #: TPU, composed jnp ops elsewhere; "fused" -- force the Pallas path
+    #: (interpret mode off-TPU); "composed" -- force the reference ops.
+    #: Fused needs whole KV-head groups per tensor-parallel shard; the
+    #: dispatch layer falls back to "composed" otherwise.
+    paged_kernel: str = "auto"
     kv_dtype: str | None = None          # KV cache dtype override (e.g.
                                          # "float8_e4m3fn" -- halves KV traffic)
     kv_page_slots: int = 256

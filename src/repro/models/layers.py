@@ -369,10 +369,10 @@ def decode_attention_block(cfg: ModelConfig, p: Params, x: jax.Array,
     k_cache = jnp.where(pos == idx, k_new.astype(k_cache.dtype), k_cache)
     v_cache = jnp.where(pos == idx, v_new.astype(v_cache.dtype), v_cache)
     if cfg.attn_impl == "pallas":
-        from repro.kernels.decode_attention import decode_attention as dec
+        from repro.kernels.paged_decode.flash_ops import decode_attention as dec
         out = dec(q[:, :, 0], k_cache, v_cache, lengths, window=cfg.window)
     else:
-        from repro.kernels.decode_attention import ref as dec_ref
+        from repro.kernels.paged_decode import flash_ref as dec_ref
         out = dec_ref.decode_attention(q[:, :, 0], k_cache, v_cache, lengths,
                                        window=cfg.window)
     out = out.reshape(b, 1, cfg.n_heads * hd)

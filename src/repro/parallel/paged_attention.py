@@ -1,23 +1,23 @@
 """Paged decode attention over an emulated KV memory (DESIGN.md §3.1).
 
-The KV cache is a flat store of pages cyclically owned by the devices of the
-``kv_axes`` mesh axes -- the paper's emulated-memory distribution
-(`repro.core.emem` addressing).  Decoding one token:
+THIN DISPATCH layer: the per-shard compute lives in
+:mod:`repro.kernels.paged_decode` (a fused VM-walking Pallas path and the
+composed-ops oracle, selected per platform/`ModelConfig.paged_kernel` by
+``resolve_impl``); this module contributes only what is genuinely
+control-plane --
 
-  1. the new K/V row is *written* to its owning shard (the paper's WRITE
-     message; here a masked scatter since every shard runs the same SPMD
-     program);
-  2. each shard computes partial flash-decode statistics over the pages it
-     owns (compute-to-data: the paper's remote DMA READ inverted -- instead
-     of moving pages to the client we move the tiny query to the pages,
-     which is the TPU-native optimization recorded in DESIGN.md §2);
-  3. partials are merged with a log-sum-exp-weighted psum over ``kv_axes``.
+  * the shard_map plumbing: the KV pages are cyclically owned by the
+    devices of the ``kv_axes`` mesh axes (the paper's emulated-memory
+    distribution, one home: :mod:`repro.emem_vm.layout`), query heads stay
+    sharded over the tensor-parallel axis, and the per-shard partial
+    statistics are merged with a log-sum-exp-weighted psum over
+    ``kv_axes``.  The merge consumes the impl-independent (acc, m, l)
+    contract, so fused and composed shards mix freely;
+  * the host-side page movers (swap, COW, spill) the serving engine hands
+    the BlockManager as ``PageIO`` callbacks.
 
-Query heads stay sharded over the tensor-parallel axis; K/V pages are
-replicated over it (GQA KV is small).
-
-Frame ownership is described by the ``vm`` translation state exported by the
-serving engine's :class:`repro.emem_vm.BlockManager` (``cache["vm"]``):
+Frame ownership is described by the ``vm`` translation state exported by
+the serving engine's :class:`repro.emem_vm.BlockManager` (``cache["vm"]``):
 
   * ``block_table`` [B, max_lpages] -- logical page -> physical frame
     (-1 = unmapped).  A frame may appear in SEVERAL sequences' rows: prefix
@@ -43,6 +43,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.emem_vm.layout import frame_rows
+from repro.kernels.paged_decode import ops as pd_ops
 from repro.models.config import ModelConfig
 from repro.parallel import mesh_ctx
 
@@ -54,70 +56,6 @@ def _flat_axis_index(axes: tuple[str, ...]) -> jax.Array:
     for a in axes[1:]:
         idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
     return idx
-
-
-def _partial_paged_attention(cfg: ModelConfig, q, k_pages, v_pages, lengths,
-                             *, owner_mask, lpage, head_start):
-    """Partial attention of q against this shard's pages.
-
-    q: [B, Hl, hd] (local heads); k/v_pages: [np_loc, slots, Hkv, hd];
-    owner_mask: [B, np_loc] -- whether each local page belongs to sequence b
-    (several rows may claim one page under prefix sharing); lpage: [np_loc]
-    logical in-sequence page of each local page.
-    Returns (acc [B, Hl, hd] unnormalized, m [B, Hl], l [B, Hl])."""
-    b, hl, hd = q.shape
-    np_loc, slots, hkv, _ = k_pages.shape
-    scale = hd ** -0.5
-    group = cfg.n_heads // cfg.n_kv_heads
-
-    # in-sequence position of each local token, and who may attend it
-    pos = lpage[:, None] * slots + jnp.arange(slots)
-    tok_pos = pos.reshape(-1)                              # [T_loc]
-    tok_owned = jnp.broadcast_to(owner_mask[:, :, None],
-                                 (b, np_loc, slots)).reshape(b, -1)
-
-    # per-local-head KV head selection
-    kvh = (head_start + jnp.arange(hl)) // group           # [Hl]
-    kf = k_pages.reshape(np_loc * slots, hkv, hd).astype(jnp.float32)
-    vf = v_pages.reshape(np_loc * slots, hkv, hd).astype(jnp.float32)
-    k_sel = jnp.take(kf, kvh, axis=1)                      # [T_loc, Hl, hd]
-    v_sel = jnp.take(vf, kvh, axis=1)
-
-    logits = jnp.einsum("bhd,thd->bht", q.astype(jnp.float32), k_sel) * scale
-    valid = tok_owned & (tok_pos[None, :] < lengths[:, None])  # [B, T_loc]
-    if cfg.window is not None:
-        valid &= tok_pos[None, :] >= (lengths[:, None] - cfg.window)
-    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
-    m = logits.max(-1)                                     # [B, Hl]
-    p = jnp.exp(logits - m[..., None])
-    p = jnp.where(valid[:, None, :], p, 0.0)
-    l = p.sum(-1)
-    acc = jnp.einsum("bht,thd->bhd", p, v_sel)
-    return acc, m, l
-
-
-def _write_target(bt, fr, wm, pidx, b, max_pages):
-    """Global frame each sequence writes this step, with drops applied.
-
-    Returns (gpage [B], ok [B]): ``ok`` is False for masked-off sequences,
-    unmapped pages, and shared (read-only) frames."""
-    if bt is not None:
-        gpage = bt[jnp.arange(b), pidx]
-        ro = fr[jnp.clip(gpage, 0)] & (gpage >= 0)
-        ok = wm & (gpage >= 0) & ~ro
-    else:
-        gpage = jnp.arange(b) * max_pages + pidx
-        ok = wm
-    return gpage, ok
-
-
-def _owner_mask(bt, fl, g_all, b, max_pages):
-    """[B, n_local_pages] membership: does page g back sequence b?"""
-    if bt is not None:
-        lpage = fl[g_all]
-        return bt[:, lpage] == g_all[None, :], lpage
-    b_of, lpage = g_all // max_pages, g_all % max_pages
-    return b_of[None, :] == jnp.arange(b)[:, None], lpage
 
 
 def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
@@ -135,15 +73,28 @@ def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
     latest position overwritten with pad-token K/V."""
     ctx = mesh_ctx.get_context()
     b, h, hd = q.shape
-    n_pages, slots = k_pages.shape[0], k_pages.shape[1]
+    n_pages = k_pages.shape[0]
     max_pages = n_pages // b
+    group = cfg.n_heads // cfg.n_kv_heads
     if write_mask is None:
         write_mask = jnp.ones((b,), bool)
+    pooled = vm is not None
+    if vm is None:
+        bt = jnp.zeros((1, 1), jnp.int32)
+        fl = jnp.zeros((1,), jnp.int32)
+        fr = jnp.zeros((1,), bool)
+    else:
+        bt, fl, fr = vm["block_table"], vm["frame_lpage"], vm["frame_ro"]
 
     if ctx is None or ctx.n_kv_shards * ctx.tp == 1:
-        # single-device fallback: same math, no collectives
-        out, kp, vp = _single_shard(cfg, q, k_new, v_new, k_pages, v_pages,
-                                    lengths, max_pages, vm, write_mask)
+        # single-device fallback: same per-shard entry, no collectives
+        impl = pd_ops.resolve_impl(cfg.paged_kernel, h, group)
+        acc, m, l, kp, vp = pd_ops.paged_decode_shard(
+            q, k_new, v_new, k_pages, v_pages, lengths, bt, fl, fr,
+            write_mask, sid=0, n_shards=1, head_start=0, group=group,
+            window=cfg.window, max_pages=max_pages, use_vm=pooled,
+            impl=impl)
+        out = (acc / jnp.where(l == 0.0, 1.0, l)[..., None]).astype(q.dtype)
         return out, kp, vp
 
     n_shards = ctx.n_kv_shards
@@ -152,27 +103,15 @@ def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
     hl = h // ctx.tp
     kv_axes = ctx.kv_axes
     tp_axis = ctx.tp_axis
-    pooled = vm is not None
+    impl = pd_ops.resolve_impl(cfg.paged_kernel, hl, group)
 
     def body(q_l, k_new_l, v_new_l, kp_l, vp_l, len_l, bt, fl, fr, wm):
         sid = _flat_axis_index(kv_axes)
         tp_idx = jax.lax.axis_index(tp_axis)
-        np_loc = kp_l.shape[0]
-        bt_ = bt if pooled else None
-        # WRITE: scatter the new K/V row into its owning shard's page
-        pidx = (len_l - 1) // slots
-        gpage, ok = _write_target(bt_, fr, wm, pidx, b, max_pages)
-        rows = jnp.where(ok & (gpage % n_shards == sid),
-                         gpage // n_shards, np_loc)
-        off = (len_l - 1) % slots
-        kp_l = kp_l.at[rows, off].set(k_new_l.astype(kp_l.dtype), mode="drop")
-        vp_l = vp_l.at[rows, off].set(v_new_l.astype(vp_l.dtype), mode="drop")
-        # READ/compute: partial attention over owned pages
-        g_all = jnp.arange(np_loc) * n_shards + sid   # global page/frame ids
-        owner_mask, lpage = _owner_mask(bt_, fl, g_all, b, max_pages)
-        acc, m, l = _partial_paged_attention(
-            cfg, q_l, kp_l, vp_l, len_l, owner_mask=owner_mask, lpage=lpage,
-            head_start=tp_idx * hl)
+        acc, m, l, kp_l, vp_l = pd_ops.paged_decode_shard(
+            q_l, k_new_l, v_new_l, kp_l, vp_l, len_l, bt, fl, fr, wm,
+            sid=sid, n_shards=n_shards, head_start=tp_idx * hl, group=group,
+            window=cfg.window, max_pages=max_pages, use_vm=pooled, impl=impl)
         # merge partials across the emulated-memory shards
         m_glob = jax.lax.pmax(m, kv_axes)
         w = jnp.exp(m - m_glob)
@@ -181,12 +120,6 @@ def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
         out = (num / jnp.where(den == 0.0, 1.0, den)[..., None]).astype(q_l.dtype)
         return out, kp_l, vp_l
 
-    if vm is None:
-        bt = jnp.zeros((1, 1), jnp.int32)
-        fl = jnp.zeros((1,), jnp.int32)
-        fr = jnp.zeros((1,), bool)
-    else:
-        bt, fl, fr = vm["block_table"], vm["frame_lpage"], vm["frame_ro"]
     kv_spec = P(kv_axes if len(kv_axes) > 1 else kv_axes[0])
     fn = shard_map(
         body, mesh=ctx.mesh,
@@ -196,32 +129,6 @@ def paged_decode_attention(cfg: ModelConfig, q, k_new, v_new, k_pages,
         check_rep=False)
     return fn(q, k_new, v_new, k_pages, v_pages, lengths, bt, fl, fr,
               write_mask)
-
-
-def _single_shard(cfg, q, k_new, v_new, k_pages, v_pages, lengths, max_pages,
-                  vm: dict | None = None, write_mask=None):
-    b, h, hd = q.shape
-    n_pages, slots = k_pages.shape[0], k_pages.shape[1]
-    pidx = (lengths - 1) // slots
-    if write_mask is None:
-        write_mask = jnp.ones((b,), bool)
-    bt = vm["block_table"] if vm is not None else None
-    fl = vm["frame_lpage"] if vm is not None else None
-    fr = vm["frame_ro"] if vm is not None else None
-    gpage, ok = _write_target(bt, fr, write_mask, pidx, b, max_pages)
-    safe_rows = jnp.where(ok, gpage, n_pages)
-    off = (lengths - 1) % slots
-    k_pages = k_pages.at[safe_rows, off].set(k_new.astype(k_pages.dtype),
-                                             mode="drop")
-    v_pages = v_pages.at[safe_rows, off].set(v_new.astype(v_pages.dtype),
-                                             mode="drop")
-    g_all = jnp.arange(n_pages)
-    owner_mask, lpage = _owner_mask(bt, fl, g_all, b, max_pages)
-    acc, m, l = _partial_paged_attention(
-        cfg, q, k_pages, v_pages, lengths, owner_mask=owner_mask,
-        lpage=lpage, head_start=jnp.int32(0))
-    out = (acc / jnp.where(l == 0.0, 1.0, l)[..., None]).astype(q.dtype)
-    return out, k_pages, v_pages
 
 
 def paged_decode_block(cfg: ModelConfig, p_attn: dict, h: jax.Array,
@@ -262,18 +169,14 @@ def slot_state_entries(cache: dict):
 
 
 def _frame_rows(frames: jax.Array, n_pages: int) -> jax.Array:
-    """Frame id -> row of the *global* k/v_pages array.
-
-    Under the cyclic emulated-memory distribution shard ``f % S`` holds
-    frame ``f`` at local row ``f // S``, and the shard_map global array
-    concatenates the shard blocks -- so host-side page movers (COW, swap)
-    must permute, or they would touch the wrong physical pages on any
-    multi-shard mesh.  Identity without a mesh."""
+    """Frame id -> row of the *global* k/v_pages array, under the current
+    mesh context (identity without one).  The mapping itself lives in
+    :func:`repro.emem_vm.layout.frame_rows` -- host-side page movers (COW,
+    swap) must permute through it, or they would touch the wrong physical
+    pages on any multi-shard mesh."""
     ctx = mesh_ctx.get_context()
-    if ctx is None or ctx.n_kv_shards == 1:
-        return frames
-    s = ctx.n_kv_shards
-    return (frames % s) * (n_pages // s) + frames // s
+    n_shards = 1 if ctx is None else ctx.n_kv_shards
+    return frame_rows(frames, n_pages, n_shards)
 
 
 def read_frame_pages(cache: dict, frames) -> list:

@@ -54,14 +54,17 @@ the BlockManager decides on, via the :class:`repro.emem_vm.PageIO`
 callbacks bound at construction.
 
 **Fused multi-step decode.**  The steady-state token loop does not cross
-the host boundary once per step: before each ``step()`` the engine
-computes a *fused horizon* -- the largest run of decode steps that is
-provably free of control-plane events (no budget or ``max_len``
-completion, and per ``BlockManager.noop_run`` no frame growth,
-copy-on-write, prefetch decision or preemption risk for any active slot)
--- and executes the whole run as one jitted ``lax.while_loop``
+the host boundary once per step: before each ``step()`` the engine caps
+the run at the first budget / ``max_len`` completion, *stages* it against
+the BlockManager (:meth:`BlockManager.stage_fused_run` pre-allocates the
+boundary prefetches the stepwise loop would have granted, so page
+boundaries no longer end a run; only growth-after-declined-prefetch,
+copy-on-write or end-of-table do), and executes the whole plan as one
+jitted ``lax.while_loop``
 (:func:`repro.serve.fused_decode.fused_decode_run`) with greedy argmax
-sampling in-kernel.  One ``int32[cap, B]`` token buffer crosses the host
+sampling in-kernel -- the staged (lpage, frame) mappings ride in as
+per-iteration columns the device applies to the carried vm tables, and
+the plan is committed afterwards for the steps that actually ran.  One ``int32[cap, B]`` token buffer crosses the host
 boundary per run, and the engine then replays the per-step bookkeeping
 (token attribution, ``StepClock`` time, budgets, completion checks)
 host-side from that buffer -- byte-for-byte what the stepwise path would
@@ -586,20 +589,19 @@ class ServeEngine:
 
     # -- decode -------------------------------------------------------------
     def _fused_horizon(self, order, lengths, max_steps: int | None) -> int:
-        """Largest run of decode steps from the current state that is
-        provably free of control-plane events, capped at
-        ``max_fused_steps`` (and ``max_steps``, the scheduler's external
-        bound -- e.g. steps until the next trace arrival).
-
-        Per active slot the run may not reach past its completion
-        (budget or ``max_len``: the completing step may BE the last run
-        step, since completion handling happens after the run) nor past
-        the first step whose KV write the BlockManager could not absorb
-        as a pure table lookup (``noop_run``: unmapped page -> growth /
-        possible preemption, shared page -> copy-on-write, prefetched
-        page -> first-write accounting, one-before-boundary -> prefetch
-        decision).  EOS cannot be bounded host-side -- the fused loop
-        itself exits on it."""
+        """Completion cap on a fused run: steps until the first active
+        slot completes on budget or ``max_len`` (the completing step may
+        BE the last run step, since completion handling happens after the
+        run), bounded by ``max_fused_steps`` and ``max_steps`` (the
+        scheduler's external bound -- e.g. steps until the next trace
+        arrival).  Block-table feasibility is no longer part of this
+        bound: the BlockManager *stages* the run
+        (:meth:`BlockManager.stage_fused_run`), pre-allocating the
+        boundary prefetches the stepwise loop would have granted, so page
+        boundaries no longer end a run -- only events that cannot be
+        staged (growth after a declined prefetch, copy-on-write, end of
+        table) shorten the plan.  EOS cannot be bounded host-side -- the
+        fused loop itself exits on it."""
         cap = self.ecfg.max_fused_steps
         if max_steps is not None:
             cap = min(cap, max_steps)
@@ -608,33 +610,51 @@ class ServeEngine:
                 return 1
             cap = min(cap, int(self.budget[i]),
                       self.ecfg.max_len - 1 - int(lengths[i]))
-            if self.blocks is not None and cap > 1:
-                cap = min(cap, self.blocks.noop_run(i, int(lengths[i]), cap))
         return max(cap, 1)
 
-    def _step_fused(self, order, horizon: int) -> int:
+    def _step_fused(self, order, horizon: int, plan=None) -> int:
         """Run ``horizon`` decode steps (fewer on an EOS exit) as one
         jitted while-loop dispatch, then replay the per-step bookkeeping
         host-side from the sampled-token buffer -- byte-for-byte the
         counters, timestamps, budgets and completion decisions the
-        stepwise path would have produced.  The horizon guarantees no
-        frame growth, prefetch, preemption or admission opportunity
-        occurs inside the run, so none of that code needs to run here."""
+        stepwise path would have produced.  The staged ``plan`` owns the
+        run's boundary prefetches: their (lpage, frame) mappings ride
+        into the loop as per-iteration columns the device applies to the
+        carried vm tables, and after the run the plan is committed for
+        the steps that actually executed (EOS may end the run early) --
+        unreached stagings are returned to the allocator with no counter
+        traffic.  No other frame growth, preemption or admission
+        opportunity can occur inside the run, so none of that code needs
+        to run here."""
         from repro.serve.fused_decode import fused_decode_run
+        cap = int(self.ecfg.max_fused_steps)
         active = np.zeros(self.ecfg.slots, bool)
         toks = np.zeros((self.ecfg.slots, 1), np.int32)
+        staged_lp = np.full((self.ecfg.slots, cap), -1, np.int32)
+        staged_fm = np.full((self.ecfg.slots, cap), -1, np.int32)
         lengths0 = np.array(self.lengths)
         for i in order:
             active[i] = True
             toks[i, 0] = self.slot_req[i]._next
+        if plan is not None:
+            for st in plan.allocs:
+                if st.k_hit < horizon:   # applied by iteration k_hit's body;
+                    staged_lp[st.seq, st.k_hit] = st.lpage
+                    staged_fm[st.seq, st.k_hit] = st.frame
+                # k_hit == horizon stagings commit host-side only -- the
+                # dirty flag re-syncs the device tables before the next
+                # dispatch, exactly like a stepwise trailing prefetch
         eos = -1 if self.ecfg.eos_id is None else int(self.ecfg.eos_id)
         self._sync_vm()
         buf, n_done, self.cache, self.lengths = fused_decode_run(
-            self.model, int(self.ecfg.max_fused_steps), self.params,
+            self.model, cap, self.params,
             jnp.array(toks), self.cache, self.lengths, jnp.array(active),
-            jnp.int32(horizon), jnp.int32(eos))
+            jnp.int32(horizon), jnp.int32(eos),
+            jnp.array(staged_lp), jnp.array(staged_fm))
         buf = np.asarray(buf)            # the one host sync of the run
         n = int(n_done)
+        if plan is not None:
+            self.blocks.commit_fused_run(plan, n)
         self.counters["decode_steps"] += n
         self.counters["dispatches"] += 1
         c0 = self.metrics.clock.now()
@@ -689,10 +709,19 @@ class ServeEngine:
                        key=lambda s: self._admit_seq[s])
         if not order:
             return 0
-        horizon = self._fused_horizon(order, np.asarray(self.lengths),
-                                      max_steps)
+        lengths_np = np.asarray(self.lengths)
+        horizon = self._fused_horizon(order, lengths_np, max_steps)
+        plan = None
+        if horizon > 1 and self.blocks is not None:
+            plan = self.blocks.stage_fused_run(
+                order, [int(lengths_np[i]) for i in order], horizon)
+            if plan.n <= 1:              # immediate growth/COW: stepwise
+                self.blocks.cancel_fused_run(plan)
+                plan, horizon = None, 1
+            else:
+                horizon = plan.n
         if horizon > 1:
-            return self._step_fused(order, horizon)
+            return self._step_fused(order, horizon, plan)
         toks = np.zeros((self.ecfg.slots, 1), np.int32)
         lengths = np.array(self.lengths)
         for i in order:

@@ -20,15 +20,23 @@ This module moves the whole steady-state inner loop onto the device:
   engine checks on ``req.output[-1]`` after a step.
 
 The caller is responsible for making the run control-plane free: the
-engine computes a *fused horizon* from the per-slot budgets, ``max_len``
-and the BlockManager's block tables (``BlockManager.noop_run``) before
-launch, so no iteration inside the run could have needed frame growth,
-copy-on-write, prefetch, preemption, admission, or completion handling.
-Those all stay in host Python, byte-for-byte where they were, at the run
-boundaries.  Budget and ``max_len`` exhaustion therefore never need an
-in-loop check -- they are folded into ``n_steps`` -- and only EOS, which
-depends on sampled tokens the host has not seen, exits the loop from
-inside.
+engine *stages* the run against the BlockManager
+(:meth:`BlockManager.stage_fused_run`) before launch, so no iteration
+inside the run could have needed unplanned frame growth, copy-on-write,
+preemption, admission, or completion handling.  Boundary prefetches the
+stepwise loop would have granted are pre-allocated host-side and handed
+in as ``staged_lp``/``staged_frame`` ``[B, cap]`` columns: column ``k``
+holds the (logical page, frame) mapping each slot's iteration ``k`` must
+see (-1 = nothing staged), and the loop body applies it to the carried
+``cache["vm"]`` tables *before* that iteration's decode -- the device-side
+half of the prefetch whose allocator half already happened.  That is what
+lets a fused run cross page boundaries instead of ending at every one.
+Everything else stays in host Python, byte-for-byte where it was, at the
+run boundaries (:meth:`BlockManager.commit_fused_run` replays counters
+and host tables for the steps that actually ran).  Budget and ``max_len``
+exhaustion never need an in-loop check -- they are folded into
+``n_steps`` -- and only EOS, which depends on sampled tokens the host has
+not seen, exits the loop from inside.
 
 Both entry points are module-level jits with the :class:`Model` facade as
 a static argument (a frozen dataclass, hashable by config value), so every
@@ -62,7 +70,7 @@ def sampled_decode_step(model, params, tokens, cache, lengths, write_mask):
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
 def fused_decode_run(model, cap, params, tokens, cache, lengths, active,
-                     n_steps, eos_id):
+                     n_steps, eos_id, staged_lp=None, staged_frame=None):
     """Run up to ``n_steps`` decode steps in one jitted while-loop.
 
     Args:
@@ -81,6 +89,15 @@ def fused_decode_run(model, cap, params, tokens, cache, lengths, active,
       n_steps: traced iteration bound (the engine's fused horizon).
       eos_id: traced int32 EOS token (-1 when the engine has none: no
         token matches, so the loop never EOS-exits).
+      staged_lp / staged_frame: ``int32[B, cap]`` pre-staged prefetch
+        mappings, or None.  Column ``k`` is applied to the carried
+        ``cache["vm"]`` tables at the TOP of iteration ``k``, before its
+        decode: ``block_table[b, staged_lp[b, k]] = staged_frame[b, k]``
+        and ``frame_lpage[staged_frame[b, k]] = staged_lp[b, k]``, with
+        -1 entries dropped (remapped to positive out-of-bounds sentinels
+        first -- jax normalizes NEGATIVE indices by wrapping before
+        scatter mode="drop" applies, so a raw -1 would hit the last row).
+        Ignored when the cache carries no ``vm`` tables (batch layout).
 
     Returns ``(buf, n_done, cache, lengths)``: the ``int32[cap, B]``
     sampled-token buffer (row k = tokens sampled by iteration k), the
@@ -98,6 +115,25 @@ def fused_decode_run(model, cap, params, tokens, cache, lengths, active,
 
     def body(carry):
         k, toks, cache, lens, buf, _ = carry
+        if staged_lp is not None and "vm" in cache:
+            # apply this iteration's staged prefetch mappings before the
+            # decode -- the device half of the host's staged allocation
+            lp = jax.lax.dynamic_index_in_dim(staged_lp, k, axis=1,
+                                              keepdims=False)
+            fm = jax.lax.dynamic_index_in_dim(staged_frame, k, axis=1,
+                                              keepdims=False)
+            vm = dict(cache["vm"])
+            rows = jnp.arange(lp.shape[0])
+            # -1 would WRAP to the last row (negative indices normalize
+            # before the drop mode applies): send empties out-of-bounds
+            lp_ix = jnp.where(lp < 0, vm["block_table"].shape[1], lp)
+            fm_ix = jnp.where(fm < 0, vm["frame_lpage"].shape[0], fm)
+            vm["block_table"] = vm["block_table"].at[rows, lp_ix].set(
+                fm, mode="drop")
+            vm["frame_lpage"] = vm["frame_lpage"].at[fm_ix].set(
+                lp, mode="drop")
+            cache = dict(cache)
+            cache["vm"] = vm
         lens = lens + inc
         logits, cache = model.decode_step(params, toks, cache, lens,
                                           write_mask=active)

@@ -608,6 +608,121 @@ def test_sched_reorder_token_identity_on_meshes(n_devices):
 
 
 @pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_paged_decode_fused_matches_composed_on_meshes(n_devices):
+    """Dispatch-level acceptance for the VM-walking kernels: the fused
+    Pallas path (interpret mode on CPU) and the composed-ops oracle return
+    byte-identical pages and merged outputs within fp tolerance through the
+    same shard_map dispatch, on 1/2/4-way KV sharding -- plus a
+    (4 kv) x (2 tp) mesh so the kv_start head-offset path is covered."""
+    out = run_with_devices(f"""
+        import dataclasses
+        from repro.models import ModelConfig
+        from repro.parallel import mesh_ctx
+        from repro.parallel.paged_attention import paged_decode_attention
+        n_dev = {n_devices}
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                          n_heads=8, n_kv_heads=2, head_dim=16, d_ff=128,
+                          vocab_size=128, kv_layout="pooled",
+                          kv_page_slots=8, param_dtype="float32",
+                          compute_dtype="float32")
+        rng = np.random.default_rng(0)
+        B, hkv, hd, n_pages, ps = 2, 2, 16, 16, 8
+        q = jnp.asarray(rng.normal(size=(B, 8, hd)).astype(np.float32))
+        k_new = jnp.asarray(rng.normal(size=(B, hkv, hd)).astype(np.float32))
+        v_new = jnp.asarray(rng.normal(size=(B, hkv, hd)).astype(np.float32))
+        kp = jnp.asarray(rng.normal(size=(n_pages, ps, hkv, hd))
+                         .astype(np.float32))
+        vp = jnp.asarray(rng.normal(size=(n_pages, ps, hkv, hd))
+                         .astype(np.float32))
+        lengths = jnp.asarray([21, 9], jnp.int32)
+        bt = np.full((B, 8), -1, np.int32)
+        fl = np.zeros(n_pages, np.int32)
+        fr = np.zeros(n_pages, bool)
+        alloc = iter([5, 2, 11, 7, 3, 13])    # deliberately scattered
+        for b in range(B):
+            for lp in range((int(lengths[b]) + ps - 1) // ps):
+                f = next(alloc); bt[b, lp] = f; fl[f] = lp
+        fr[int(bt[1, 0])] = True              # seq 1 writes a shared page
+        vm = {{"block_table": jnp.array(bt), "frame_lpage": jnp.array(fl),
+               "frame_ro": jnp.array(fr)}}
+        wm = jnp.asarray(np.array([True, True]))
+        shapes = [((n_dev, 1), ("data", "model"))]
+        if n_dev == 4:
+            shapes.append(((4, 2), ("data", "model")))
+        for shape, axes in shapes:
+            outs = {{}}
+            for impl in ("fused", "composed"):
+                mesh = make_mesh(shape, axes)
+                mesh_ctx.set_context(mesh, batch_axes=("data",),
+                                     tp_axis="model", kv_axes=("data",))
+                c = dataclasses.replace(cfg, paged_kernel=impl)
+                outs[impl] = paged_decode_attention(
+                    c, q, k_new, v_new, kp, vp, lengths, vm, wm)
+                mesh_ctx.clear_context()
+            o_f, kf, vf = outs["fused"]
+            o_c, kc, vc = outs["composed"]
+            assert np.array_equal(np.asarray(kf), np.asarray(kc)), shape
+            assert np.array_equal(np.asarray(vf), np.asarray(vc)), shape
+            err = float(jnp.max(jnp.abs(o_f - o_c)))
+            assert err < 1e-5, (shape, err)
+            print("DISPATCH_FUSED_OK", shape, err)
+        print("ALL_DISPATCH_FUSED_OK")
+    """, n_devices=max(n_devices * 2, 2))
+    assert "ALL_DISPATCH_FUSED_OK" in out
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_serve_fused_kernel_token_identity_on_meshes(n_devices):
+    """Tentpole acceptance: the full serving engine with
+    ``paged_kernel="fused"`` (the VM-walking Pallas path, interpret mode on
+    CPU) produces byte-identical tokens and telemetry to
+    ``paged_kernel="composed"`` on 1/2/4-device meshes, under BOTH
+    kv_layout policies."""
+    out = run_with_devices(f"""
+        import dataclasses
+        from repro.models import Model, ModelConfig
+        from repro.parallel import mesh_ctx
+        from repro.serve import EngineConfig, Request, ServeEngine, Scheduler
+        n_dev = {n_devices}
+        base = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                           n_heads=8, n_kv_heads=2, head_dim=16, d_ff=128,
+                           vocab_size=128, kv_layout="pooled",
+                           kv_page_slots=4, param_dtype="float32",
+                           compute_dtype="float32")
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, 128,
+                                int(rng.integers(2, 7))).astype(np.int32)
+                   for _ in range(3)]
+        for layout in ("pooled", "paged"):
+            outs, stats = {{}}, {{}}
+            for impl in ("fused", "composed"):
+                cfg = dataclasses.replace(
+                    base, kv_layout=layout, paged_kernel=impl,
+                    kv_pool_pages=16 if layout == "pooled" else None)
+                mesh = make_mesh((n_dev, 1), ("data", "model"))
+                mesh_ctx.set_context(mesh, batch_axes=("data",),
+                                     tp_axis="model", kv_axes=("data",))
+                model = Model(cfg)
+                params = model.init(jax.random.key(0))
+                engine = ServeEngine(model, params,
+                                     EngineConfig(slots=2, max_len=32))
+                sched = Scheduler(engine)
+                sched.submit([Request(uid=i, prompt=p, max_new_tokens=6)
+                              for i, p in enumerate(prompts)])
+                done = sched.run()
+                stats[impl] = engine.shutdown()
+                outs[impl] = {{r.uid: tuple(r.output) for r in done}}
+                mesh_ctx.clear_context()
+            assert outs["fused"] == outs["composed"], (layout, outs)
+            assert stats["fused"]["telemetry"] == \\
+                stats["composed"]["telemetry"], layout
+            print("SERVE_KERNEL_OK", layout)
+        print("ALL_SERVE_KERNEL_OK", n_dev)
+    """, n_devices=max(n_devices, 2))
+    assert "ALL_SERVE_KERNEL_OK" in out
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
 def test_fused_decode_token_identity_on_meshes(n_devices):
     """Fused multi-step decode vs step-at-a-time dispatch on 1/2/4-device
     meshes, across both BlockManager policies: identical tokens and

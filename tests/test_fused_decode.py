@@ -1,8 +1,9 @@
 """Fused multi-step decode (the jitted ``lax.while_loop`` dispatch path):
 token and telemetry identity against step-at-a-time dispatch -- including
-under swap- and spill-preemption pressure -- the ``BlockManager.noop_run``
-horizon query the fusion gate is built on, early exit at page boundaries
-and EOS, and the regression pin that the fused engine reproduces the
+under swap- and spill-preemption pressure -- the
+``BlockManager.stage_fused_run`` staging protocol the fusion gate is built
+on (pre-staged boundary prefetches let runs CROSS page boundaries), early
+exit at EOS, and the regression pin that the fused engine reproduces the
 committed SLO baseline byte-for-byte."""
 import json
 import os
@@ -105,26 +106,57 @@ def test_fused_identity_under_spill_pressure(rng):
 
 # -- the noop_run horizon query ----------------------------------------------
 def test_noop_run_semantics():
-    """Step-by-step contract of the pure horizon query: breaks exactly
-    where ensure_writable or the post-step prefetch hook would touch
-    host-side state, and nowhere else."""
+    """Step-by-step contract of the pure horizon query (a staged plan that
+    is immediately cancelled): grantable boundary prefetches no longer end
+    a run -- they would be staged -- so the horizon counts straight through
+    page boundaries and stops only at events staging cannot absorb: the
+    end of the block table, and (tested separately) copy-on-write and a
+    declined prefetch."""
     from repro.emem_vm import BlockManager
     bm = BlockManager(n_frames=8, n_seqs=2, max_lpages=4, page_slots=4)
     bm.begin_seq(0, np.arange(3, dtype=np.int32))
     for pos in range(3):                          # prefill maps page 0
         bm.ensure_writable(0, pos)
-    # pos 3 is fine, but writing it lands one-before-a-boundary with page
-    # 1 unmapped: the post-step prefetch hook would run -> not a no-op
-    assert bm.noop_run(0, 3, 8) == 0
+    free0 = bm.allocator.free_count()
+    c0 = dict(bm.counters)
+    # boundaries at nl=4, 8, 12 would all be staged: limit comes back
+    assert bm.noop_run(0, 3, 8) == 8
+    # ... and the query left no trace: allocator and counters untouched
+    assert bm.allocator.free_count() == free0
+    assert bm.counters == c0
+    # steps 0..12 write pos 3..15; pos 16 would need page 4 -> off-table
+    assert bm.noop_run(0, 3, 64) == 13
     bm.ensure_writable(0, 3)
     assert bm.prefetch(0, 4)                      # page 1 now pending
-    # first write into a prefetched page settles hit accounting -> break
-    assert bm.noop_run(0, 4, 8) == 0
+    # a pending prefetch hit is deferred accounting, not a break
+    assert bm.noop_run(0, 4, 8) == 8
     bm.ensure_writable(0, 4)                      # hit recorded, page live
-    # pos 5, 6 are free runs; pos 7 is the next prefetch decision
-    assert bm.noop_run(0, 5, 8) == 2
+    assert bm.noop_run(0, 5, 8) == 8
     assert bm.noop_run(0, 5, 1) == 1              # limit caps the answer
     assert bm.noop_run(0, 5, 0) == 0
+
+
+def test_noop_run_stops_at_declined_prefetch():
+    """The headroom gate is the one boundary event staging must NOT absorb:
+    when the stepwise loop would have declined the speculative allocation
+    (free frames <= live sequences), the next boundary write is mandatory
+    growth -- possibly a preemption -- and the run must end exactly where
+    stepwise dispatch would have faulted."""
+    from repro.emem_vm import BlockManager
+    bm = BlockManager(n_frames=3, n_seqs=2, max_lpages=4, page_slots=4)
+    bm.begin_seq(0, np.arange(3, dtype=np.int32))
+    bm.begin_seq(1, np.arange(3, dtype=np.int32))
+    for pos in range(3):
+        bm.ensure_writable(0, pos)
+        bm.ensure_writable(1, pos)
+    # 2 live seqs, 1 free frame: the nl=4 prefetch is declined for both
+    # slots, so the run covers the boundary-deciding step and stops --
+    # step 1 would write pos 4 into an unmapped page (mandatory growth)
+    free0 = bm.allocator.free_count()
+    plan = bm.stage_fused_run([0, 1], [3, 3], 8)
+    assert plan.n == 1 and plan.allocs == []
+    bm.cancel_fused_run(plan)
+    assert bm.allocator.free_count() == free0
 
 
 def test_noop_run_breaks_on_shared_page():
@@ -156,11 +188,14 @@ def test_noop_run_reserved_is_unbounded():
     assert bm.noop_run(0, 15, 64) == 64
 
 
-# -- early exit ---------------------------------------------------------------
-def test_fused_runs_break_at_page_boundaries(rng):
-    """No fused run may write across a prefetch decision point (the
-    one-before-a-boundary position with the next page unmapped): those
-    steps must execute stepwise so the host can run the allocator."""
+# -- boundary crossing --------------------------------------------------------
+def test_fused_runs_cross_page_boundaries(rng):
+    """The point of staged prefetch: a fused run no longer ends at a page
+    boundary.  With ample pool headroom every boundary allocation is
+    staged, the (lpage, frame) mappings ride into the while_loop, and the
+    whole generation executes as ONE dispatch that writes across several
+    page boundaries (the paper's §2.1 'translation rides the access' --
+    there is no host round-trip left at a page crossing)."""
     from repro.serve import EngineConfig, Request, ServeEngine
     cfg = _cfg(pool_pages=8, page_slots=8)
     model = Model(cfg)
@@ -176,15 +211,42 @@ def test_fused_runs_break_at_page_boundaries(rng):
         n_before = int(np.asarray(engine.lengths)[0])
         n = engine.step()
         runs.append((n_before, n))
-    engine.shutdown()
+    stats = engine.shutdown()
     ps, lpages = 8, 4
+    crossed = 0
     for start, n in runs:
         if n > 1:
             for pos in range(start, start + n):
-                boundary = (pos + 1) % ps == 0 and (pos + 1) // ps < lpages
-                assert not boundary, (runs, pos)
+                if (pos + 1) % ps == 0 and (pos + 1) // ps < lpages:
+                    crossed += 1                  # boundary INSIDE a run
+    assert crossed >= 1, runs
     assert any(n > 1 for _, n in runs), runs      # fusion did engage
     assert sum(n for _, n in runs) == len(req.output)
+    # the staged allocations are accounted exactly like stepwise prefetch
+    assert stats["prefetch_allocs"] >= crossed
+    assert stats["prefetch_hits"] >= crossed
+
+
+def test_fused_boundary_stats_match_stepwise(rng):
+    """Satellite regression for staged-prefetch accounting: a fused engine
+    and an explicit max_fused_steps=1 engine must report IDENTICAL pool
+    and serving counters -- prefetch_allocs/prefetch_hits attribution from
+    the while_loop carry replay included -- with dispatches the only
+    number fusion is allowed to move (downward)."""
+    prompts = [rng.integers(0, 64, int(rng.integers(3, 8))).astype(np.int32)
+               for _ in range(6)]
+    kw = dict(pool_pages=24, page_slots=4, max_new=10, slots=4)
+    fused, st_f = _serve(prompts, max_fused_steps=8, **kw)
+    step, st_s = _serve(prompts, max_fused_steps=1, **kw)
+    assert fused == step
+    assert st_f["prefetch_allocs"] > 0            # boundaries were staged
+    assert st_f["prefetch_hits"] > 0
+    keys = (set(st_f) | set(st_s)) - {"dispatches", "telemetry"}
+    diff = {k: (st_f.get(k), st_s.get(k)) for k in keys
+            if st_f.get(k) != st_s.get(k)}
+    assert not diff, diff
+    assert st_f["telemetry"] == st_s["telemetry"]
+    assert st_f["dispatches"] < st_s["dispatches"]
 
 
 def test_fused_eos_early_exit(rng):

@@ -6,10 +6,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention import kernel as dec_k, ref as dec_ref
-from repro.kernels.emem_gather import kernel as eg_k, ref as eg_ref
 from repro.kernels.flash_attention import kernel as fa_k, ref as fa_ref
 from repro.kernels.mamba2_ssd import kernel as ssd_k, ref as ssd_ref
+from repro.kernels.paged_decode import flash as dec_k, flash_ref as dec_ref
+from repro.kernels.paged_decode import gather as eg_k, gather_ref as eg_ref
+from repro.kernels.paged_decode import ops as pd_ops
 
 
 def _tol(dtype):
@@ -96,7 +97,7 @@ def test_flash_decode_sweep(rng, dtype, window):
 
 
 def test_decode_partial_merge_equals_full(rng):
-    from repro.kernels.decode_attention import ops
+    from repro.kernels.paged_decode import flash_ops as ops
     B, Hq, Hkv, S, D, P = 2, 4, 2, 64, 8, 4
     q = jnp.asarray(rng.normal(size=(B, Hq, D)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
@@ -114,6 +115,136 @@ def test_decode_partial_merge_equals_full(rng):
                                 jnp.stack([p[2] for p in parts]))
     full = dec_ref.decode_attention(q, k, v, lengths)
     np.testing.assert_allclose(merged, full, rtol=1e-5, atol=1e-5)
+
+
+# -- fused paged decode (VM walk in-kernel) vs composed oracle -------------------
+def _mk_vm(rng, b, max_lpages, page_slots, lengths, shared_page0=False):
+    """Random-but-valid BlockManager-style tables: every live page of every
+    sequence mapped to a distinct frame (scrambled assignment -- the walk
+    must not rely on contiguity), optionally one read-only frame backing
+    page 0 of EVERY sequence (prefix sharing)."""
+    n_frames = b * max_lpages
+    bt = np.full((b, max_lpages), -1, np.int32)
+    fl = np.zeros((n_frames,), np.int32)
+    fr = np.zeros((n_frames,), bool)
+    free = list(rng.permutation(n_frames))
+    sh = None
+    if shared_page0:
+        sh = int(free.pop())
+        fl[sh], fr[sh] = 0, True
+    for s in range(b):
+        for lp in range((int(lengths[s]) + page_slots - 1) // page_slots):
+            if sh is not None and lp == 0:
+                bt[s, 0] = sh
+                continue
+            f = int(free.pop())
+            bt[s, lp], fl[f] = f, lp
+    return jnp.asarray(bt), jnp.asarray(fl), jnp.asarray(fr)
+
+
+def _run_shard(rng, impl, *, b=3, max_lpages=4, page_slots=8, hkv=2, group=2,
+               window=None, lengths=(25, 9, 17), shared_page0=False,
+               write_mask=None, use_vm=True):
+    hl, hd = hkv * group, 16
+    n_frames = b * max_lpages
+    lengths = np.asarray(lengths, np.int32)
+    q = jnp.asarray(rng.normal(size=(b, hl, hd)).astype(np.float32))
+    k_new = jnp.asarray(rng.normal(size=(b, hkv, hd)).astype(np.float32))
+    v_new = jnp.asarray(rng.normal(size=(b, hkv, hd)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(n_frames, page_slots, hkv, hd))
+                     .astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(n_frames, page_slots, hkv, hd))
+                     .astype(np.float32))
+    bt, fl, fr = _mk_vm(rng, b, max_lpages, page_slots, lengths,
+                        shared_page0=shared_page0)
+    wm = jnp.asarray(np.ones(b, bool) if write_mask is None
+                     else np.asarray(write_mask, bool))
+    return pd_ops.paged_decode_shard(
+        q, k_new, v_new, kp, vp, jnp.asarray(lengths), bt, fl, fr, wm,
+        sid=0, n_shards=1, head_start=0, group=group, window=window,
+        max_pages=max_lpages, use_vm=use_vm, impl=impl, interpret=True)
+
+
+def _assert_shard_match(fused, composed):
+    acc_f, m_f, l_f, kp_f, vp_f = fused
+    acc_c, m_c, l_c, kp_c, vp_c = composed
+    # pages must be BYTE-identical: the write path either lands the same
+    # row or drops it, there is no arithmetic to round
+    np.testing.assert_array_equal(np.asarray(kp_f), np.asarray(kp_c))
+    np.testing.assert_array_equal(np.asarray(vp_f), np.asarray(vp_c))
+    np.testing.assert_array_equal(np.asarray(m_f), np.asarray(m_c))
+    np.testing.assert_allclose(np.asarray(acc_f), np.asarray(acc_c),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l_f), np.asarray(l_c),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+@pytest.mark.parametrize("lengths", [(25, 9, 17), (1, 32, 8), (31, 2, 24)])
+def test_paged_decode_fused_matches_composed(rng, window, lengths):
+    """The fused kernels walking cache['vm'] inside the grid reproduce the
+    composed host-side-translation oracle over ragged lengths, scrambled
+    frame assignments and sliding windows: same written pages (byte-equal),
+    same running max (exact), same softmax statistics."""
+    seed = int(rng.integers(1 << 31))
+    fused = _run_shard(np.random.default_rng(seed), "fused",
+                       window=window, lengths=lengths)
+    composed = _run_shard(np.random.default_rng(seed), "composed",
+                          window=window, lengths=lengths)
+    _assert_shard_match(fused, composed)
+
+
+def test_paged_decode_fused_write_drop(rng):
+    """Write suppression inside the kernel: a masked-off sequence
+    (write_mask) and a sequence whose current page is a shared read-only
+    frame must both leave the pages untouched -- the in-kernel frame_ro /
+    write-mask test, not a host-computed scatter target."""
+    seed = int(rng.integers(1 << 31))
+    # lengths <= page_slots: every sequence is still writing page 0, which
+    # is the SHARED read-only frame -> every write drops; wm masks seq 2
+    kw = dict(lengths=(5, 3, 8), shared_page0=True,
+              write_mask=(True, True, False))
+    fused = _run_shard(np.random.default_rng(seed), "fused", **kw)
+    composed = _run_shard(np.random.default_rng(seed), "composed", **kw)
+    _assert_shard_match(fused, composed)
+    # and the drop actually happened: pages came through unmodified
+    base = _run_shard(np.random.default_rng(seed), "composed",
+                      write_mask=(False, False, False), **{
+                          k: v for k, v in kw.items() if k != "write_mask"})
+    np.testing.assert_array_equal(np.asarray(fused[3]), np.asarray(base[3]))
+
+
+def test_paged_decode_fused_shared_frame_attends_once(rng):
+    """A frame shared by several sequences (prefix sharing) is attended by
+    EACH member exactly once -- membership is the in-kernel ownership test
+    -- with divergent suffix pages private per sequence."""
+    seed = int(rng.integers(1 << 31))
+    kw = dict(lengths=(25, 9, 17), shared_page0=True)
+    fused = _run_shard(np.random.default_rng(seed), "fused", **kw)
+    composed = _run_shard(np.random.default_rng(seed), "composed", **kw)
+    _assert_shard_match(fused, composed)
+
+
+def test_paged_decode_fused_no_vm_identity_tables(rng):
+    """use_vm=False (the batch kv_layout): the fused path synthesizes the
+    fixed arithmetic mapping as identity tables in-jit and must agree with
+    the composed bt-is-None arithmetic."""
+    seed = int(rng.integers(1 << 31))
+    fused = _run_shard(np.random.default_rng(seed), "fused", use_vm=False)
+    composed = _run_shard(np.random.default_rng(seed), "composed",
+                          use_vm=False)
+    _assert_shard_match(fused, composed)
+
+
+def test_paged_decode_resolve_impl():
+    """Dispatch policy: 'composed' always honored; 'fused' honored whenever
+    the local head count splits into whole KV groups (interpret mode makes
+    it CPU-runnable); ragged groups always fall back."""
+    assert pd_ops.resolve_impl("composed", 8, 2) == "composed"
+    assert pd_ops.resolve_impl("fused", 8, 2) == "fused"
+    assert pd_ops.resolve_impl("fused", 7, 2) == "composed"  # ragged group
+    auto = pd_ops.resolve_impl("auto", 8, 2)
+    assert auto in ("fused", "composed")       # fused iff actually on TPU
 
 
 # -- mamba2 SSD -------------------------------------------------------------------
