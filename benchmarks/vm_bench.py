@@ -4,7 +4,10 @@ pooled-vs-fixed slot utilization, the shared-prefix serving workload
 the swap/churn workload (preempt+swap+restore vs recompute, plus the
 retained-prefix hit rate across an idle gap), the tiered-churn workload
 (host pool sized to force HOST -> SPILL demotion; spill-resume vs
-recompute), the residency-aware scheduling workload (mixed
+recompute), the prefix-index workload (256-prompt retained population:
+radix-tree lookup vs the linear-scan oracle, semantics asserted
+identical per query before the speedup is timed), the
+residency-aware scheduling workload (mixed
 hot-prefix/cold traffic: bounded-window admission reordering vs FIFO at
 equal KV bytes), and the SLO workload (a seeded Poisson/Zipf trace
 replayed against the step loop so requests genuinely queue: p99 TTFT and
@@ -422,6 +425,106 @@ def _retention_rows(record: dict, smoke: bool = False) -> list[dict]:
 
 
 # ---------------------------------------------------------------------------
+# Prefix-index workload (radix tree vs the linear-scan oracle at scale)
+# ---------------------------------------------------------------------------
+def _prefix_index_rows(record: dict, smoke: bool = False) -> list[dict]:
+    """Radix-tree prefix index vs the retired linear scan at population
+    scale: 256 distinct prompts (16 hot 8-token heads x 16 tails) driven
+    through identical admit/release cycles on two BlockManagers that
+    differ only in ``prefix_index``, leaving ~64 retained pool entries.
+    A Zipf-popular query stream (hot heads, fresh tails) then measures the
+    lookup: the tree descends once per query regardless of pool size, the
+    oracle scans every retained entry.  Every query is asserted to return
+    the *identical* ``(match_len, donor)`` and ``AdmissionCost`` on both
+    indexes before anything is timed, and a follow-up admit phase asserts
+    the retained-hit counters stay in lockstep -- the speedup is gated,
+    the semantics are proven equal.  Same configuration in smoke and full
+    runs, like the other serving workloads, so the gate compares like
+    with like."""
+    from repro.emem_vm.block_manager import BlockManager
+    page_slots, n_groups, n_tails = 4, 16, 16
+    head_len = tail_len = 8                       # 16-token / 4-page prompts
+    rng = np.random.default_rng(11)
+    heads = [rng.integers(0, 64, head_len).astype(np.int32)
+             for _ in range(n_groups)]
+    # tail-major order: the LRU keeps the newest 64 entries, which then
+    # span every head group -- no query ever faces a fully evicted group
+    population = [np.concatenate(
+        [heads[g], rng.integers(0, 64, tail_len).astype(np.int32)])
+        for _ in range(n_tails) for g in range(n_groups)]
+
+    def admit_cycle(bm, prompt):
+        m = bm.begin_seq(0, prompt)
+        for pos in range(min(m, len(prompt) - 1), len(prompt)):
+            bm.ensure_writable(0, pos)
+        bm.release_seq(0, completed=True)
+
+    def build(prefix_index):
+        bm = BlockManager(n_frames=600, n_seqs=4, max_lpages=4,
+                          page_slots=page_slots, policy="on_demand",
+                          share_prefixes=True, retain_frames=256,
+                          prefix_index=prefix_index)
+        for p in population:
+            admit_cycle(bm, p)
+        return bm
+
+    tree, linear = build("tree"), build("linear")
+    entries = tree.stats()["retained_entries"]
+    assert entries == linear.stats()["retained_entries"] >= 32, entries
+    # Zipf-popular heads with fresh tails: never an exact pool hit, so
+    # every lookup walks for its longest proper prefix
+    groups = (rng.zipf(1.2, size=512) - 1) % n_groups
+    queries = [np.concatenate(
+        [heads[g], rng.integers(0, 64, tail_len).astype(np.int32)])
+        for g in groups[:128]]
+    for q in queries:                 # semantics first, wall clock second
+        assert tree._match_prefix(q) == linear._match_prefix(q), q
+        assert tree.admission_cost(q) == linear.admission_cost(q), q
+
+    def lookups(bm):
+        for q in queries:
+            bm._match_prefix(q)
+
+    us_tree = timeit(lookups, tree)
+    us_linear = timeit(lookups, linear)
+    ratio = us_linear / max(us_tree, 1e-9)
+    assert ratio >= 1.5, (
+        f"tree lookup only {ratio:.2f}x the linear scan at "
+        f"{entries} retained entries")
+    # retained hit rate under the Zipf stream: both indexes must serve the
+    # same pool hits; the rate itself is seed-deterministic and gated
+    hit0 = tree.counters["retained_tokens"]
+    total = 0
+    for q in queries[:48]:
+        for bm in (tree, linear):
+            admit_cycle(bm, q)
+        total += len(q)
+    hit_tokens = tree.counters["retained_tokens"] - hit0
+    assert (hit_tokens
+            == linear.counters["retained_tokens"] - hit0), "index divergence"
+    hit_rate = hit_tokens / max(total, 1)
+    assert hit_rate > 0, "Zipf stream never hit the retention pool"
+    leaks = (tree.shutdown(), linear.shutdown())
+    assert leaks == (0, 0), f"prefix-index workload leaked frames: {leaks}"
+    record["prefix_index"] = {
+        "population": len(population), "retained_entries": entries,
+        "queries": len(queries),
+        "match_us_linear": round(us_linear, 1),
+        "match_us_tree": round(us_tree, 1),
+        "match_lookup_ratio": round(ratio, 2),
+        "retained_hit_rate": round(hit_rate, 3),
+    }
+    return [row("vm/prefix_index/lookup", us_tree,
+                f"tree {us_tree / len(queries):.1f}us/q vs linear "
+                f"{us_linear / len(queries):.1f}us/q = {ratio:.2f}x "
+                f"at {entries} retained entries"),
+            row("vm/prefix_index/hit_rate", 0.0,
+                f"{hit_tokens} retained tokens "
+                f"({hit_rate:.0%} of Zipf query tokens), "
+                f"identical on both indexes")]
+
+
+# ---------------------------------------------------------------------------
 # Residency-aware scheduling workload (admission reordering vs FIFO)
 # ---------------------------------------------------------------------------
 def _run_sched(window: int, system, cold_prompt, hot_tails, pool: int,
@@ -738,7 +841,8 @@ def _paged_decode_rows(record: dict, smoke: bool = False) -> list[dict]:
 # ---------------------------------------------------------------------------
 #: sections re-measured identically by smoke runs (mergeable + gateable)
 _SERVING_SECTIONS = ("prefix_sharing", "swap", "tiered", "retention",
-                     "scheduling", "slo", "dispatch", "paged_decode")
+                     "prefix_index", "scheduling", "slo", "dispatch",
+                     "paged_decode")
 #: headline metrics per section for history and the regression gate:
 #: tuples of (metric key, lower_is_better) -- throughput/ratio metrics are
 #: higher-is-better, the SLO latency metrics are lower-is-better
@@ -747,6 +851,10 @@ _HEADLINES = {
     "swap": (("decode_step_ratio", False),),
     "tiered": (("decode_step_ratio", False),),
     "retention": (("retained_hit_rate", False),),
+    # the lookup ratio is a same-process ratio of two timings (machine
+    # speed divides out), and the hit rate is seed-deterministic
+    "prefix_index": (("match_lookup_ratio", False),
+                     ("retained_hit_rate", False)),
     "scheduling": (("tokens_per_step_ratio", False),),
     "slo": (("p99_ttft_steps", True), ("mean_itl_steps", True)),
     # the wall-clock ratio is asserted >=2x inside the workload itself but
@@ -891,6 +999,7 @@ def collect(smoke: bool = False) -> tuple[list[dict], dict]:
     out = (_throughput_rows(record, smoke) + _utilization_rows(record)
            + _prefix_rows(record, smoke) + _swap_rows(record, smoke)
            + _tiered_rows(record, smoke) + _retention_rows(record, smoke)
+           + _prefix_index_rows(record, smoke)
            + _sched_rows(record, smoke) + _slo_rows(record, smoke)
            + _dispatch_rows(record, smoke)
            + _paged_decode_rows(record, smoke))

@@ -57,12 +57,14 @@ def main():
         for r in done[:3]:
             print(f"  req {r.uid}: {list(r.prompt[:4])}... -> {r.output}")
         # per-request SLO table: every latency an exact decode-step count
-        print("  uid  wait  ttft  mean_itl  tokens  preempt  shared")
+        print("  uid  wait  ttft  mean_itl  tokens  preempt  shared  "
+              "match_pages")
         for row in engine.metrics.request_rows():
             print(f"  {row['uid']:>3}  {row['queue_wait']:>4}  "
                   f"{row['ttft']:>4}  {row['mean_itl']!s:>8}  "
                   f"{row['tokens']:>6}  {row['preemptions']:>7}  "
-                  f"{row['shared_tokens']:>6}")
+                  f"{row['shared_tokens']:>6}  "
+                  f"{row['match_depth_pages']:>11}")
         tel = engine.telemetry()
         print(f"  ttft p50/p95/p99 = {tel['ttft_steps']['p50']}/"
               f"{tel['ttft_steps']['p95']}/{tel['ttft_steps']['p99']} steps, "

@@ -9,16 +9,19 @@ export XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
 python -m pytest -x -q "$@"
 
-# vm_bench smoke (incl. the swap/churn, retention, scheduling and
-# trace-driven slo workloads) must stay inside the CI budget:
-# allocator/engine/residency regressions crash it, slowdowns fail the
-# 30 s gate.  --gate additionally compares the smoke run's headline
+# vm_bench smoke (incl. the swap/churn, retention, prefix-index,
+# scheduling and trace-driven slo workloads) must stay inside the CI
+# budget: allocator/engine/residency regressions crash it, slowdowns fail
+# the 30 s gate.  --gate additionally compares the smoke run's headline
 # numbers (shared-prefix concurrency, swap decode-step savings, retention
-# hit rate, scheduling tokens/step, the fused-decode dispatch count and
-# paged_decode page-read ratio, and -- lower-is-better -- the slo
-# workload's p99 TTFT + mean ITL in decode steps) against the committed
-# BENCH_vm.json baseline and fails on a >15% regression, so the
-# scheduling/residency/latency/fusion gains cannot silently rot.
+# hit rate, the radix-tree-vs-linear match_lookup_ratio and the Zipf
+# stream's retained_hit_rate, scheduling tokens/step, the fused-decode
+# dispatch count and paged_decode page-read ratio, and -- lower-is-better
+# -- the slo workload's p99 TTFT + mean ITL in decode steps) against the
+# committed BENCH_vm.json baseline and fails on a >15% regression, so the
+# scheduling/residency/latency/fusion gains cannot silently rot.  A
+# headline the baseline predates (first landing of a workload) passes
+# with a logged note until a full run commits it.
 SMOKE_BUDGET_S=30
 start=$(date +%s)
 python -m benchmarks.vm_bench --smoke --gate

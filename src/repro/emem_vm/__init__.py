@@ -22,6 +22,11 @@ package adds the indirection that turns the emulation into a memory *system*:
     preempted sequences, host-pressure demotion into the spill tier,
     bounded LRU retention of completed prompts' prefix pages) for the
     serving engine;
+  * :mod:`repro.emem_vm.prefix_tree` -- the :class:`PrefixTree` radix
+    index over prompt token ids: O(prompt-length) longest-common-prefix
+    lookup with the linear scan's exact tie-break contract, pool
+    terminals owning the retention pool's refcounted page lists, live
+    terminals mirroring decoding prompts;
   * :mod:`repro.emem_vm.spill`       -- the :class:`SpillStore`, the
     file/``bytes``-backed third tier the host store demotes into under
     capacity pressure.
@@ -33,6 +38,7 @@ from repro.emem_vm.allocator import (FrameAllocator, OutOfFrames,  # noqa: F401
 from repro.emem_vm.block_manager import (AdmissionCost, BlockManager,  # noqa: F401
                                          CowCopy, PageIO)
 from repro.emem_vm.layout import frame_rows, shard_frames  # noqa: F401
+from repro.emem_vm.prefix_tree import PrefixTree  # noqa: F401
 from repro.emem_vm.spill import SpillStore  # noqa: F401
 from repro.emem_vm.cache import CacheSpec, HotPageCache  # noqa: F401
 from repro.emem_vm.page_table import PROT_NONE, PROT_R, PROT_RW, PROT_W  # noqa: F401

@@ -61,6 +61,21 @@ refcount>1 bit, which rides in ``cache["vm"]`` into the paged-attention
 kernel where writes to shared frames are dropped (defense in depth -- the
 engine resolves COW host-side *before* the decode step that writes).
 
+**Prefix index** (``prefix_index="tree"``, the default): prompt matching
+and the retention pool live in a :class:`~repro.emem_vm.prefix_tree.
+PrefixTree` -- a compressed radix tree over token ids whose pool
+terminals own the retained page lists and whose live terminals mirror
+the live prompts.  ``_match_prefix`` is one O(prompt-length) descent
+regardless of pool size, LRU reclaim prunes the coldest pool terminal,
+and ``_reclaimable`` reads tree-maintained per-frame counts instead of
+walking every entry.  ``prefix_index="linear"`` keeps the retired
+scan-everything matcher (``_retained`` OrderedDict) for one PR as the
+differential-test oracle; both produce byte-identical donors, allocator
+traffic and reclaim order.  ``epoch`` is a monotone counter bumped on
+every mutation that can change an admission cost -- unlike ``dirty``
+(which the engine clears after re-pushing tables) it never goes
+backwards, so the scheduler keys its admission-score cache on it.
+
 All state is host-side numpy (control plane); the data plane only ever sees
 the exported tables.  The page payloads moved by evict/restore are opaque to
 this module -- the engine's :class:`PageIO` callbacks read and write the
@@ -77,6 +92,7 @@ import numpy as np
 
 from repro.emem_vm.allocator import (FrameAllocator, OutOfFrames,  # noqa: F401
                                      OutOfHostFrames, OutOfSpillFrames)
+from repro.emem_vm.prefix_tree import PrefixTree
 from repro.emem_vm.spill import SpillStore
 
 
@@ -187,7 +203,9 @@ class _SwapRecord:
 
 @dataclasses.dataclass
 class _RetainEntry:
-    """A completed prompt's prefix pages kept alive for future admissions."""
+    """A completed prompt's prefix pages kept alive for future admissions
+    (``prefix_index="linear"`` oracle only -- the tree index stores these
+    as pool terminals)."""
     tokens: np.ndarray   # the prompt whose KV the pages hold
     pages: list          # [(lpage, device_frame), ...]
 
@@ -197,9 +215,12 @@ class BlockManager:
                  page_slots: int, policy: str = "on_demand",
                  share_prefixes: bool = False, n_host_frames: int | None = None,
                  retain_frames: int = 0, swap_enabled: bool = True,
-                 n_spill_frames: int = 0, spill_path: str | None = None):
+                 n_spill_frames: int = 0, spill_path: str | None = None,
+                 prefix_index: str = "tree"):
         if policy not in ("reserved", "on_demand"):
             raise ValueError(f"unknown policy {policy!r}")
+        if prefix_index not in ("tree", "linear"):
+            raise ValueError(f"unknown prefix_index {prefix_index!r}")
         if policy == "reserved" and n_frames < n_seqs * max_lpages:
             raise ValueError(
                 f"reserved policy needs {n_seqs * max_lpages} frames, "
@@ -209,6 +230,17 @@ class BlockManager:
         self.max_lpages = max_lpages
         self.page_slots = page_slots
         self.policy = policy
+        #: monotone mutation counter over everything an admission cost can
+        #: depend on (tables, refcounts, retention pool, swap records,
+        #: sharing toggle).  Unlike ``dirty`` it is never cleared, so the
+        #: scheduler's score cache keys on it.
+        self.epoch = 0
+        self.prefix_index = prefix_index if policy == "on_demand" else "linear"
+        #: the radix-tree prefix index (matching + retention pool); None
+        #: on the linear oracle path and under the reserved policy (which
+        #: never matches or retains)
+        self._tree = PrefixTree(page_slots) \
+            if self.prefix_index == "tree" else None
         self.share_prefixes = share_prefixes and policy == "on_demand"
         #: host tier sizing: default one host frame per device frame
         if n_host_frames is None:
@@ -264,6 +296,24 @@ class BlockManager:
                     self.block_table[s, lp] = f
                     self.frame_lpage[f] = lp
 
+    @property
+    def share_prefixes(self) -> bool:
+        return self._share_prefixes
+
+    @share_prefixes.setter
+    def share_prefixes(self, value: bool) -> None:
+        """Callers may toggle sharing after construction (benches do);
+        the toggle changes every future match, so it advances the
+        epoch."""
+        self._share_prefixes = bool(value) and self.policy == "on_demand"
+        self.epoch += 1
+
+    def _mark_dirty(self) -> None:
+        """Tables changed: the engine must re-push ``cache["vm"]``, and
+        any cached admission score is stale."""
+        self.dirty = True
+        self.epoch += 1
+
     # -- allocation with retention-pool reclaim --------------------------------
     def _alloc_frame(self) -> int:
         """Allocate a device frame, reclaiming LRU retained entries under
@@ -289,30 +339,39 @@ class BlockManager:
             # prefer the oldest entry that frees something on its own; fall
             # back to plain LRU for frames shared ACROSS entries, which only
             # free once every holding entry is gone
-            key = next((k for k, e in self._retained.items()
-                        if self._entry_freeable(e) > 0),
-                       next(iter(self._retained)))
-            freed += self._drop_entry(self._retained.pop(key))
+            if self._tree is not None:
+                keys = self._tree.lru_keys()
+                key = next(
+                    (k for k in keys
+                     if self._pages_freeable(self._tree.pool_pages(k)) > 0),
+                    keys[0])
+                pages = self._tree.remove_pool(key)
+            else:
+                key = next((k for k, e in self._retained.items()
+                            if self._pages_freeable(e.pages) > 0),
+                           next(iter(self._retained)))
+                pages = self._retained.pop(key).pages
+            freed += self._drop_pages(pages)
             self.counters["retained_reclaimed"] += 1
         return freed
 
-    def _entry_freeable(self, entry: _RetainEntry) -> int:
-        """Device frames dropping this entry would actually free."""
+    def _pages_freeable(self, pages: list) -> int:
+        """Device frames dropping this page list would actually free."""
         counts: dict[int, int] = {}
-        for _, f in entry.pages:
+        for _, f in pages:
             counts[f] = counts.get(f, 0) + 1
         return sum(1 for f, n in counts.items()
                    if self.allocator.refcount(f) == n
                    and self.allocator.pin_count(f) == 0)
 
-    def _drop_entry(self, entry: _RetainEntry) -> int:
+    def _drop_pages(self, pages: list) -> int:
         freed = 0
-        for _, f in entry.pages:
+        for _, f in pages:
             before = self.allocator.refcount(f)
             self.allocator.deref(f)
             self.counters["frees"] += 1
             freed += int(before == 1)
-        self.dirty = True
+        self._mark_dirty()
         return freed
 
     def _reclaimable(self, exclude_key: int | None = None) -> int:
@@ -321,7 +380,11 @@ class BlockManager:
         ``exclude_key`` names a retained entry the caller intends to SHARE
         from -- its pages must stay resident, so they are not headroom (an
         admission must not count the same frame both as an already-present
-        prefix page and as drainable slack)."""
+        prefix page and as drainable slack).  On the tree index this reads
+        the maintained per-frame counts (O(distinct pool frames)); the
+        linear oracle rebuilds them per call."""
+        if self._tree is not None:
+            return self._tree.reclaimable(self.allocator, exclude_key)
         counts: dict[int, int] = {}
         for key, entry in self._retained.items():
             if key == exclude_key:
@@ -342,9 +405,13 @@ class BlockManager:
         wins with a strictly longer match.
 
         Returns (match_len, donor) where donor is ("pool", key) or
-        ("live", seq); (0, None) when sharing is off or nothing matches."""
+        ("live", seq); (0, None) when sharing is off or nothing matches.
+        On the tree index this is one O(len(tokens)) radix descent; the
+        linear oracle scans every candidate."""
         if not self.share_prefixes or len(tokens) == 0:
             return 0, None
+        if self._tree is not None:
+            return self._tree.lookup(tokens)
         best, donor = 0, None
 
         def common(p):
@@ -425,7 +492,7 @@ class BlockManager:
         if self.policy == "reserved":
             self.shared_len[seq] = 0
             return 0
-        self.dirty = True
+        self._mark_dirty()
         assert (self.block_table[seq] < 0).all(), f"seq {seq} already mapped"
         match, donor = self._match_prefix(tokens)
         ps = self.page_slots
@@ -433,9 +500,13 @@ class BlockManager:
         if donor is not None and n_pages:
             kind, key = donor
             if kind == "pool":
-                entry = self._retained[key]
-                self._retained.move_to_end(key)
-                frames = dict(entry.pages)
+                if self._tree is not None:
+                    frames = dict(self._tree.pool_pages(key))
+                    self._tree.touch_pool(key)
+                else:
+                    entry = self._retained[key]
+                    self._retained.move_to_end(key)
+                    frames = dict(entry.pages)
                 self.counters["retained_hits"] += 1
                 self.counters["retained_tokens"] += match
             else:
@@ -452,6 +523,8 @@ class BlockManager:
         self.counters["shared_tokens"] += match
         if self.share_prefixes:
             self._prompts[seq] = tokens.copy()
+            if self._tree is not None:
+                self._tree.insert_live(seq, tokens)
         return match
 
     def ensure_writable(self, seq: int, pos: int) -> list[CowCopy]:
@@ -472,7 +545,7 @@ class BlockManager:
             self.allocator.pin(nf)
             self.block_table[seq, lp] = nf
             self.frame_lpage[nf] = lp
-            self.dirty = True
+            self._mark_dirty()
             return []
         if (seq, lp) in self._prefetched:
             self._prefetched.discard((seq, lp))
@@ -485,7 +558,7 @@ class BlockManager:
             self.block_table[seq, lp] = nf
             self.frame_lpage[nf] = lp
             self.counters["cow_copies"] += 1
-            self.dirty = True
+            self._mark_dirty()
             return [CowCopy(src=f, dst=nf)]
         return []
 
@@ -520,7 +593,7 @@ class BlockManager:
         self.block_table[seq, lp] = nf
         self.frame_lpage[nf] = lp
         self._prefetched.add((seq, lp))
-        self.dirty = True
+        self._mark_dirty()
         return True
 
     def stage_fused_run(self, seqs: Sequence[int], lengths: Sequence[int],
@@ -648,7 +721,7 @@ class BlockManager:
                 self.counters["prefetch_hits"] += 1
             else:
                 self._prefetched.add((st.seq, st.lpage))
-            self.dirty = True
+            self._mark_dirty()
         for h in plan.hits:
             if h.k_hit < n_done:
                 self._prefetched.discard((h.seq, h.lpage))
@@ -757,12 +830,14 @@ class BlockManager:
             prefix_pages=sum(1 for lp, _ in pages
                              if lp * self.page_slots < shared))
         self._prompts.pop(seq, None)
+        if self._tree is not None:
+            self._tree.remove_live(seq)
         self._prefetched = {(s, lp) for s, lp in self._prefetched if s != seq}
         self.block_table[seq] = -1
         self.shared_len[seq] = 0
         self.counters["seq_swaps"] += 1
         self.counters["swap_out_pages"] += len(pages)
-        self.dirty = True
+        self._mark_dirty()
         return len(pages)
 
     def has_swap(self, tag: int | None) -> bool:
@@ -811,9 +886,11 @@ class BlockManager:
         self.shared_len[seq] = 0            # every restored frame is private
         if self.share_prefixes and tokens is not None and len(tokens):
             self._prompts[seq] = np.asarray(tokens, np.int32).ravel().copy()
+            if self._tree is not None:
+                self._tree.insert_live(seq, self._prompts[seq])
         self.counters["seq_restores"] += 1
         self.counters["swap_in_pages"] += len(rec.pages)
-        self.dirty = True
+        self._mark_dirty()
         return len(rec.pages)
 
     def drop_swap(self, tag: int) -> None:
@@ -822,6 +899,7 @@ class BlockManager:
         rec = self._swapped.pop(tag, None)
         if rec is None:
             return
+        self.epoch += 1     # the tag's swap-resume cost just disappeared
         for _, bf in rec.pages:
             if self.allocator.is_spill_frame(bf):
                 self.spill.drop(bf)
@@ -839,8 +917,10 @@ class BlockManager:
         request with the same prefix skips their prefill."""
         if self.policy == "reserved":
             return
-        self.dirty = True
+        self._mark_dirty()
         prompt = self._prompts.pop(seq, None)
+        if self._tree is not None:
+            self._tree.remove_live(seq)
         self._prefetched = {(s, lp) for s, lp in self._prefetched if s != seq}
         row = self.block_table[seq]
         keep: dict[int, int] = {}
@@ -876,7 +956,26 @@ class BlockManager:
             for _, f in pages:
                 self.allocator.deref(f)
                 self.counters["frees"] += 1
-            self.dirty = True
+            self._mark_dirty()
+            return
+        if self._tree is not None:
+            dup = self._tree.find_pool(prompt)
+            if dup is not None:
+                # same prompt already retained: keep the existing terminal
+                # (its frames are the shared ones), drop the new refs
+                self._tree.touch_pool(dup)
+                for _, f in pages:
+                    self.allocator.deref(f)
+                    self.counters["frees"] += 1
+                return
+            self._retain_key += 1
+            self._tree.insert_pool(self._retain_key, prompt, pages)
+            total = self._tree.pool_frames_total
+            while total > self.retain_frames:
+                old = self._tree.remove_pool(self._tree.oldest_pool())
+                total -= len(old)
+                self._drop_pages(old)
+                self.counters["retained_reclaimed"] += 1
             return
         for key, entry in self._retained.items():
             if len(entry.tokens) == len(prompt) and \
@@ -895,16 +994,21 @@ class BlockManager:
         while total > self.retain_frames:
             _, old = self._retained.popitem(last=False)
             total -= len(old.pages)
-            self._drop_entry(old)
+            self._drop_pages(old.pages)
             self.counters["retained_reclaimed"] += 1
 
     def drain_retained(self) -> int:
         """Release every retention-pool reference; returns entries dropped
         (shutdown: a drained pool counts as zero leaked frames)."""
+        if self._tree is not None:
+            keys = self._tree.lru_keys()
+            for key in keys:
+                self._drop_pages(self._tree.remove_pool(key))
+            return len(keys)
         n = len(self._retained)
         while self._retained:
             _, entry = self._retained.popitem(last=False)
-            self._drop_entry(entry)
+            self._drop_pages(entry.pages)
         return n
 
     # -- exported tables (ride in cache["vm"] into the kernel) ----------------
@@ -925,11 +1029,18 @@ class BlockManager:
         return self.allocator.free_count()
 
     def stats(self) -> dict:
+        if self._tree is not None:
+            retained_entries = self._tree.pool_count
+            retained_frames = self._tree.pool_frames_total
+        else:
+            retained_entries = len(self._retained)
+            retained_frames = sum(len(e.pages)
+                                  for e in self._retained.values())
         return {**self.allocator.stats(), **self.counters,
                 "policy": self.policy, "live_seqs": len(self._prompts),
-                "retained_entries": len(self._retained),
-                "retained_frames": sum(len(e.pages)
-                                       for e in self._retained.values()),
+                "prefix_index": self.prefix_index,
+                "retained_entries": retained_entries,
+                "retained_frames": retained_frames,
                 "swapped_seqs": len(self._swapped),
                 **(self.spill.stats() if self.spill is not None else {})}
 

@@ -50,6 +50,10 @@ def main() -> None:
     ap.add_argument("--retain-frames", type=int, default=0,
                     help="device frames the retention pool may keep holding "
                          "completed prompts' prefix pages (0 disables)")
+    ap.add_argument("--prefix-index", choices=("tree", "linear"),
+                    default="tree",
+                    help="prompt prefix index: radix tree (O(prompt) "
+                         "lookup) or the retired linear scan oracle")
     ap.add_argument("--host-frames", type=int, default=None,
                     help="host backing-store frames for swapped-out pages "
                          "(default: one per device frame)")
@@ -94,7 +98,8 @@ def main() -> None:
         preempt_mode=args.preempt_mode, retain_frames=args.retain_frames,
         host_frames=args.host_frames, spill_frames=args.spill_frames,
         spill_path=args.spill_path,
-        max_fused_steps=args.max_fused_steps))
+        max_fused_steps=args.max_fused_steps,
+        prefix_index=args.prefix_index))
     sched = Scheduler(engine, SchedulerConfig(window=args.sched_window,
                                               aging_steps=args.aging_steps))
     t0 = time.monotonic()

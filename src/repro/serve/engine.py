@@ -123,6 +123,10 @@ class EngineConfig:
     #: run between control-plane events (module docstring); ``1``
     #: reproduces step-at-a-time dispatch exactly
     max_fused_steps: int = 8
+    #: prompt prefix index backing the BlockManager's match + retention
+    #: pool: "tree" (radix tree, O(prompt-length) lookup) or "linear"
+    #: (the retired scan-every-candidate oracle, kept for one PR)
+    prefix_index: str = "tree"
 
 
 class ServeEngine:
@@ -132,6 +136,8 @@ class ServeEngine:
         if ecfg.max_fused_steps < 1:
             raise ValueError(
                 f"max_fused_steps must be >= 1, got {ecfg.max_fused_steps}")
+        if ecfg.prefix_index not in ("tree", "linear"):
+            raise ValueError(f"unknown prefix_index {ecfg.prefix_index!r}")
         self.model = model
         self.params = params
         self.ecfg = ecfg
@@ -161,7 +167,8 @@ class ServeEngine:
         self.counters = {"admitted": 0, "completed": 0, "preempted": 0,
                          "swapped": 0, "swap_resumed": 0, "aborted": 0,
                          "decode_steps": 0, "dispatches": 0,
-                         "shared_prompt_tokens": 0, "leaked_frames": 0}
+                         "shared_prompt_tokens": 0, "leaked_frames": 0,
+                         "score_cache_hits": 0}
         cfg = model.cfg
         if cfg.kv_layout in ("paged", "pooled"):
             from repro.emem_vm import BlockManager, PageIO
@@ -195,7 +202,8 @@ class ServeEngine:
                 retain_frames=ecfg.retain_frames,
                 swap_enabled=ecfg.preempt_mode == "swap",
                 n_spill_frames=ecfg.spill_frames,
-                spill_path=ecfg.spill_path)
+                spill_path=ecfg.spill_path,
+                prefix_index=ecfg.prefix_index)
             from repro.parallel.paged_attention import (read_frame_pages,
                                                         write_frame_pages)
             self.blocks.page_io = PageIO(
@@ -537,7 +545,10 @@ class ServeEngine:
             if self.blocks is not None:
                 shared = self.blocks.begin_seq(slot, toks)
                 self.counters["shared_prompt_tokens"] += shared
-            self.metrics.on_admit(req, shared_tokens=shared)
+            self.metrics.on_admit(
+                req, shared_tokens=shared,
+                match_depth_pages=-(-shared // self.page_slots)
+                if self.blocks is not None else 0)
             start = min(shared, len(toks) - 1)
         mask = np.zeros(self.ecfg.slots, bool)
         mask[slot] = True                # only this slot commits KV writes

@@ -52,6 +52,19 @@ score is 0.0 and ties resolve in queue order -- byte-for-byte FIFO.
     ranked honestly against an all-host one.
   * ``prefill_cycles_per_token`` -- the §7-model FLOPs proxy for one
     token's prefill; only its ratio to the PCIe page cost matters.
+
+**Score caching.**  The scheduler re-scores its window every decode step,
+but most steps change nothing a score depends on: the BlockManager bumps
+a monotone ``epoch`` on every mutation that can move an admission cost
+(table changes, refcount traffic, retention-pool churn, swap-record
+drops, the sharing toggle), so a waiting request whose token count is
+unchanged at an unchanged epoch re-uses last tick's
+``(AdmissionCost, score)`` pair instead of re-running the prefix match.
+Only the *expensive* half is cached -- ``engine.can_admit`` re-runs
+fresh on the cached cost every time, because slot availability changes
+without any BlockManager mutation (notably under the reserved policy,
+whose begin/release are no-ops on the pool).  Cache hits count into the
+engine's ``score_cache_hits`` stat.
 """
 from __future__ import annotations
 
@@ -83,6 +96,10 @@ class Scheduler:
         self.completed: list[Request] = []
         self._completed_ids: set[int] = set()    # id(req): uids may collide
         self._age: dict[int, int] = {}   # id(req) -> decode steps waited
+        #: id(req) -> (identity key, AdmissionCost, score): last tick's
+        #: pricing, valid while the BlockManager epoch and the request's
+        #: token count are unchanged (module docstring, score caching)
+        self._score_cache: dict[int, tuple] = {}
 
     def submit(self, reqs: Iterable[Request]) -> None:
         """Enqueue new arrivals.  Each is stamped into the engine's
@@ -104,15 +121,29 @@ class Scheduler:
         """(admissible now, residency score) off a single
         ``admission_cost`` query -- the prefix match and retention-pool
         walk behind it run once per candidate per pass, not once per
-        consumer."""
-        cost = self.engine.admission_cost(req)
-        if cost is None:                 # no residency signal: FIFO
+        consumer -- and off NO query at all when the last tick's answer
+        is provably current: the cost is a pure function of the request's
+        tokens, its swap record and the BlockManager state, so an
+        unchanged ``(epoch, token count, swap-record presence)`` key
+        replays the cached ``(cost, score)``.  ``can_admit`` re-runs
+        fresh either way (slot availability is not under the epoch)."""
+        blocks = self.engine.blocks
+        if blocks is None:               # no residency signal: FIFO
             return self.engine.can_admit(req), 0.0
-        return self.engine.can_admit(req, cost), admission_score(
+        ident = (blocks.epoch, len(req.output),
+                 getattr(req, "_swap", None) is not None)
+        hit = self._score_cache.get(id(req))
+        if hit is not None and hit[0] == ident:
+            self.engine.counters["score_cache_hits"] += 1
+            return self.engine.can_admit(req, hit[1]), hit[2]
+        cost = self.engine.admission_cost(req)
+        score = admission_score(
             cost.shared_tokens, cost.swap_in_pages, self.engine.page_slots,
             host=self.cfg.host,
             prefill_cycles_per_token=self.cfg.prefill_cycles_per_token,
             spill_in_pages=cost.spill_in_pages, spill=self.cfg.spill)
+        self._score_cache[id(req)] = (ident, cost, score)
+        return self.engine.can_admit(req, cost), score
 
     def _pick_next(self, tried: set[int]) -> int | None:
         """Queue index of the next request to admit, or None to admit
@@ -162,6 +193,7 @@ class Scheduler:
             req = self.queue[idx]
             del self.queue[idx]
             self._age.pop(id(req), None)
+            self._score_cache.pop(id(req), None)
             self.engine.admit(req, slots[0])
             for p in self.engine.drain_preempted():
                 tried.add(id(p))

@@ -105,6 +105,10 @@ class RequestTrace:
     swap_in_pages: int = 0            # PCIe pages moved by those swap-ins
     spill_in_pages: int = 0           # of which promoted two-hop from spill
     shared_tokens: int = 0            # prompt tokens whose prefill was skipped
+    #: deepest prefix-index match across this request's fresh admissions,
+    #: in whole KV pages -- how far down the radix tree (or linear scan)
+    #: the prompt found resident pages
+    prefix_match_depth_pages: int = 0
     aborted: bool = False
 
     @property
@@ -203,7 +207,8 @@ class Telemetry:
         self._trace(req)
 
     def on_admit(self, req, resumed: bool = False, shared_tokens: int = 0,
-                 swap_in_pages: int = 0, spill_in_pages: int = 0) -> None:
+                 swap_in_pages: int = 0, spill_in_pages: int = 0,
+                 match_depth_pages: int = 0) -> None:
         tr = self._trace(req)
         if tr.admit is None:
             tr.admit = self.clock.now()
@@ -212,6 +217,8 @@ class Telemetry:
         tr.shared_tokens += shared_tokens
         tr.swap_in_pages += swap_in_pages
         tr.spill_in_pages += spill_in_pages
+        tr.prefix_match_depth_pages = max(tr.prefix_match_depth_pages,
+                                          int(match_depth_pages))
 
     def on_token(self, req, index: int, at: int | None = None) -> None:
         """Generated token ``index`` was produced this step.  Re-production
@@ -260,6 +267,7 @@ class Telemetry:
                 "tokens": len(t.token_steps),
                 "preemptions": t.preemptions, "swaps": t.swaps,
                 "resumes": t.resumes, "shared_tokens": t.shared_tokens,
+                "match_depth_pages": t.prefix_match_depth_pages,
                 "done": t.completion is not None, "aborted": t.aborted})
         return rows
 
@@ -281,6 +289,8 @@ class Telemetry:
             "swap_in_pages": sum(t.swap_in_pages for t in self.traces),
             "spill_in_pages": sum(t.spill_in_pages for t in self.traces),
             "shared_tokens": sum(t.shared_tokens for t in self.traces),
+            "prefix_match_depth_pages": _dist(
+                [t.prefix_match_depth_pages for t in done]),
             "ttft_steps": _dist(ttfts),
             "itl_steps": _dist(gaps),
             "queue_wait_steps": _dist(waits),
